@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, result tables."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+def best_of(fn: Callable[[], None], repeats: int = 3) -> float:
+    """Best wall time of ``repeats`` runs (paper: best of five warm runs)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@dataclass
+class Table:
+    title: str
+    columns: list
+    rows: list = field(default_factory=list)
+
+    def add(self, *row):
+        self.rows.append(row)
+
+    def render(self) -> str:
+        widths = [
+            max(len(str(c)), *(len(_fmt(r[i])) for r in self.rows))
+            if self.rows else len(str(c))
+            for i, c in enumerate(self.columns)
+        ]
+        lines = [self.title, "-" * len(self.title)]
+        lines.append("  ".join(
+            str(c).ljust(w) for c, w in zip(self.columns, widths)
+        ))
+        for r in self.rows:
+            lines.append("  ".join(
+                _fmt(v).ljust(w) for v, w in zip(r, widths)
+            ))
+        return "\n".join(lines)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,131 @@
+"""Paper Figure 5: NUTS gradient-evaluation throughput vs batch size.
+
+Arms (matching the paper's, adapted to JAX per DESIGN.md §2):
+
+* ``pc``          — program-counter autobatching, whole chain compiled
+                    end-to-end with XLA (the paper's headline arm);
+* ``local``       — local static autobatching, host-Python control with
+                    XLA-compiled basic blocks (the paper's "hybrid" arm);
+* ``local_eager`` — local static autobatching, op-by-op dispatch (the
+                    paper's "eager" arm);
+* ``unbatched``   — one chain at a time through the reference
+                    interpreter (the paper's unbatched-eager baseline);
+* ``iterative``   — hand-rewritten iterative NUTS (vmap+jit), the
+                    expert-manual-effort ceiling the paper cites.
+
+Throughput = member gradient evaluations per second (leaf executions x
+active members x grads-per-leaf / wall time), best of ``repeats`` warm
+runs, compilation excluded — the paper's methodology.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import api
+from repro.mcmc import iterative, nuts, targets
+
+from .common import Table, best_of
+
+
+def throughput_sweep(
+    batch_sizes: list[int],
+    *,
+    num_data: int = 2_000,
+    dim: int = 50,
+    num_steps: int = 3,
+    max_tree_depth: int = 6,
+    steps_per_leaf: int = 4,
+    eps: float = 0.02,
+    repeats: int = 3,
+    arms: tuple = ("pc", "local", "local_eager", "unbatched", "iterative"),
+    unbatched_cap: int = 8,
+) -> Table:
+    target = targets.logistic_regression(num_data=num_data, dim=dim)
+    settings = nuts.NutsSettings(
+        max_tree_depth=max_tree_depth, num_steps=num_steps,
+        steps_per_leaf=steps_per_leaf,
+    )
+    prog = nuts.build_nuts_program(target, settings)
+    gpl = settings.grads_per_leaf
+    tab = Table(
+        f"Fig 5 — NUTS grad evals/sec "
+        f"(logreg n={num_data} d={dim}, {num_steps} steps/chain)",
+        ["batch", *arms],
+    )
+
+    for z in batch_sizes:
+        inputs = nuts.initial_state(target, z, eps=eps, seed=0)
+        row = [z]
+        for arm in arms:
+            if arm == "iterative":
+                run = iterative.make_batched(target, settings)
+                out = run(inputs["theta0"], inputs["eps"], inputs["key"])
+                grads = int(out["grads"].sum())  # warm-up/compile above
+                t = best_of(lambda: jax.block_until_ready(
+                    run(inputs["theta0"], inputs["eps"], inputs["key"])
+                    ["theta"]
+                ), repeats)
+                row.append(grads / t)
+                continue
+            if arm == "unbatched":
+                if z > unbatched_cap:
+                    row.append(float("nan"))
+                    continue
+                bp = api.autobatch(prog, z, backend="reference")
+                # count grads via a pc run (same trajectories in expectation)
+                cnt = api.autobatch(
+                    prog, z, backend="pc",
+                    max_depth=nuts.recommended_max_depth(settings),
+                    max_steps=500_000,
+                )
+                cnt(inputs)
+                execs, active = cnt.last_result.tag_stats["grad"]
+                t = best_of(lambda: bp(inputs), 1)
+                row.append(active * gpl / t)
+                continue
+            backend = arm
+            bp = api.autobatch(
+                prog, z, backend=backend,
+                max_depth=nuts.recommended_max_depth(settings),
+                max_steps=500_000,
+            )
+            bp(inputs)  # warm-up (compile)
+            if backend == "pc":
+                execs, active = bp.last_result.tag_stats["grad"]
+            else:
+                execs = bp.batcher.stats.tag_execs["grad"]
+                active = bp.batcher.stats.tag_active["grad"]
+            t = best_of(lambda: bp(inputs), repeats)
+            row.append(active * gpl / t)
+        tab.add(*row)
+    return tab
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale problem (10k x 100 logreg)")
+    ap.add_argument("--batches", default=None,
+                    help="comma-separated batch sizes")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.full:
+        kw: dict = dict(num_data=10_000, dim=100, max_tree_depth=10,
+                        num_steps=10)
+        batches = [1, 4, 16, 64, 256, 1024]
+    else:
+        kw = {}
+        batches = [1, 4, 16, 64]
+    if args.batches:
+        batches = [int(b) for b in args.batches.split(",")]
+    tab = throughput_sweep(batches, repeats=args.repeats, **kw)
+    print(tab.render())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Roofline report: reads the dry-run JSON artifacts and renders the
+per-(arch x shape x mesh) table of compute / memory / collective terms,
+dominant bottleneck, useful-FLOPs ratio and roofline fraction.
+
+Artifacts are produced by::
+
+    python -m repro.launch.dryrun --arch A --shape S [--multi-pod] --out \
+        benchmarks/artifacts/<arch>__<shape>__<mesh>.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from .common import Table
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load_artifacts(directory: str = ARTIFACT_DIR) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        cells.extend(data if isinstance(data, list) else [data])
+    return cells
+
+
+def render(cells: list[dict], mesh: str = "16x16") -> str:
+    tab = Table(
+        f"Roofline terms per (arch x shape), mesh {mesh} "
+        "(seconds per step, per chip; *_fl = with Pallas flash attention "
+        "modeled)",
+        ["arch", "shape", "t_comp", "t_mem", "t_coll", "bound",
+         "useful", "roof", "t_mem_fl", "roof_fl", "peakGB", "mb"],
+    )
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c["mesh"] != mesh or "error" in c:
+            continue
+        tab.add(
+            c["arch"], c["shape"],
+            c["t_compute"], c["t_memory"], c["t_collective"],
+            c["bottleneck"],
+            round(c.get("useful_flops_ratio", 0.0), 3),
+            round(c.get("roofline_fraction", 0.0), 4),
+            round(c["t_memory_flash"], 3) if "t_memory_flash" in c else "-",
+            round(c["roofline_fraction_flash"], 4)
+            if "roofline_fraction_flash" in c else "-",
+            round(c.get("peak_bytes", 0) / 1e9, 2),
+            c.get("microbatches", 1),
+        )
+    failed = [c for c in cells if c.get("mesh") == mesh and "error" in c]
+    out = tab.render()
+    if failed:
+        out += "\nFAILED cells: " + ", ".join(
+            f"{c['arch']}x{c['shape']}" for c in failed
+        )
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    cells = load_artifacts(args.dir)
+    if not cells:
+        print(f"(no dry-run artifacts in {args.dir} — run "
+              "python -m repro.launch.dryrun first)")
+        return 0
+    print(render(cells, args.mesh))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

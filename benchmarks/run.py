@@ -1,0 +1,52 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs one benchmark per paper table/figure (quick CPU configurations;
+pass ``--full`` for paper-scale) plus the framework-level benches, and
+renders the roofline table from any dry-run artifacts present.
+
+  fig5   NUTS gradient throughput vs batch size (paper Fig. 5)
+  fig6   batch utilization across recursion (paper Fig. 6)
+  serve  VM-scheduled generation engine throughput
+  roofline  per-(arch x shape x mesh) terms from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import fig5_throughput, fig6_utilization, roofline, serve_bench
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig5,fig6,serve,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("fig5"):
+        print()
+        fig5_throughput.main(["--full"] if args.full else [])
+    if want("fig6"):
+        print()
+        fig6_utilization.main(["--full"] if args.full else [])
+    if want("serve"):
+        print()
+        serve_bench.main([])
+    if want("roofline"):
+        print()
+        roofline.main([])
+        print()
+        roofline.main(["--mesh", "2x16x16"])
+    print(f"\n[benchmarks done in {time.time() - t0:.1f}s]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Serve a small LM with batched requests through the autobatch VM.
+
+    PYTHONPATH=src python examples/serve_lm.py --lanes 8
+
+The generation loop (streaming prefill -> sample-until-EOS -> next
+request in the lane's queue) is a *program in the paper's IR*; the
+program-counter VM executes all lanes in lockstep with masking, so
+requests of different prompt lengths / generation lengths / queue depths
+batch together — continuous batching as a compiler artifact rather than
+bespoke scheduler code.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import get_model
+from repro.serve.engine import EngineConfig, GenerationEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lanes", type=int, default=8)
+    ap.add_argument("--requests-per-lane", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--check", action="store_true",
+                    help="verify against the sequential oracle")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config("smollm-135m")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        lanes=args.lanes,
+        max_context=64,
+        max_prompt_len=12,
+        max_new_tokens=args.max_new,
+        requests_per_lane=args.requests_per_lane,
+        eos_id=0,
+        backend="pc",
+    )
+    engine = GenerationEngine(model, params, ecfg)
+    print(f"engine: {args.lanes} lanes x {args.requests_per_lane} requests, "
+          f"program blocks: {len(engine.batched.lowered.blocks)}, "
+          f"stacks: {len(engine.batched.lowered.stack_vars)} "
+          f"(loop-only program -> none)")
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        1, cfg.vocab_size,
+        (args.lanes, args.requests_per_lane, ecfg.max_prompt_len),
+    ).astype(np.int32)
+    plens = rng.integers(
+        2, ecfg.max_prompt_len + 1, (args.lanes, args.requests_per_lane)
+    ).astype(np.int32)
+
+    res = engine.generate(prompts, plens)  # compile + run
+    t0 = time.time()
+    res = engine.generate(prompts, plens)
+    dt = time.time() - t0
+    total = int(res["lengths"].sum())
+    print(f"generated {total} tokens in {dt:.2f}s "
+          f"({total/dt:,.0f} tok/s), decode-batch utilization "
+          f"{res['utilization']:.3f}")
+    print("first lane, first request tokens:",
+          res["tokens"][0, 0, : res['lengths'][0, 0]])
+
+    if args.check:
+        ref = engine.reference_generate(prompts, plens)
+        ok = np.array_equal(res["tokens"], ref["tokens"])
+        print("matches sequential oracle:", ok)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Registry of assigned architectures (``--arch <id>``) and shapes."""
+from __future__ import annotations
+
+from . import (
+    deepseek_moe_16b,
+    hubert_xlarge,
+    qwen1_5_32b,
+    qwen2_vl_2b,
+    qwen3_0_6b,
+    qwen3_14b,
+    qwen3_moe_235b_a22b,
+    smollm_135m,
+    xlstm_350m,
+    zamba2_7b,
+)
+from .base import (
+    SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    applicable_shapes,
+    reduce_for_smoke,
+    skipped_shapes,
+)
+
+_MODULES = [
+    qwen3_0_6b,
+    qwen1_5_32b,
+    qwen3_14b,
+    smollm_135m,
+    deepseek_moe_16b,
+    qwen3_moe_235b_a22b,
+    xlstm_350m,
+    zamba2_7b,
+    hubert_xlarge,
+    qwen2_vl_2b,
+]
+
+REGISTRY: dict[str, ArchConfig] = {}
+for _m in _MODULES:
+    _cfg = _m.config()
+    REGISTRY[_cfg.name] = _cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[name]
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return reduce_for_smoke(get_config(name))
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)
+
+
+__all__ = [
+    "ArchConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "REGISTRY",
+    "applicable_shapes",
+    "skipped_shapes",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+    "reduce_for_smoke",
+]

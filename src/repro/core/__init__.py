@@ -1,0 +1,28 @@
+"""Autobatching core — the paper's primary contribution.
+
+Source IR (Fig. 2) -> lowering with the five compiler optimizations ->
+either the host-recursive local-static interpreter (Algorithm 1) or the
+fully-compiled program-counter VM (Algorithm 2).
+"""
+from . import analysis, api, frontend, ir, local_static, lowering, pc_vm, reference
+from .api import BatchedProgram, autobatch
+from .frontend import BOOL, F32, I32, FunctionBuilder, ProgramBuilder, spec
+
+__all__ = [
+    "analysis",
+    "api",
+    "autobatch",
+    "BatchedProgram",
+    "BOOL",
+    "F32",
+    "frontend",
+    "FunctionBuilder",
+    "I32",
+    "ir",
+    "local_static",
+    "lowering",
+    "pc_vm",
+    "ProgramBuilder",
+    "reference",
+    "spec",
+]

@@ -1,0 +1,274 @@
+"""Static analyses over the source IR: liveness, call graph, type inference.
+
+These drive the paper's five lowering optimizations:
+  (i)   per-variable caller-saves stacks     -> save sets from liveness,
+  (ii)  block-local temporaries              -> syntactic def-before-use,
+  (iii) stack only when live across a call   -> save sets / recursion info,
+  (iv)  top-of-stack caching                 -> structural in the VM,
+  (v)   pop-push elimination                 -> peephole in lowering.py.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+
+from . import ir
+
+
+# --------------------------------------------------------------------------
+# Reads/writes of source ops
+# --------------------------------------------------------------------------
+
+
+def op_reads(op: ir.Op) -> tuple[str, ...]:
+    return op.ins
+
+
+def op_writes(op: ir.Op) -> tuple[str, ...]:
+    return op.outs
+
+
+def term_reads(term: ir.Terminator) -> tuple[str, ...]:
+    if isinstance(term, ir.Branch):
+        return (term.var,)
+    return ()
+
+
+# --------------------------------------------------------------------------
+# Liveness (per function, backward dataflow over the source CFG)
+# --------------------------------------------------------------------------
+
+
+class Liveness:
+    """Per-block live-in/live-out, plus live-after sets for each op index.
+
+    ``live_after(block, op_index)`` is the set of variables whose current
+    value may still be read on some path after op ``op_index`` of ``block``
+    has executed (excluding that op's own writes-before-reads semantics).
+    """
+
+    def __init__(self, func: ir.Function):
+        self.func = func
+        n = len(func.blocks)
+        self.live_in: list[set[str]] = [set() for _ in range(n)]
+        self.live_out: list[set[str]] = [set() for _ in range(n)]
+        self._solve()
+
+    def _block_use_def(self, blk: ir.Block) -> tuple[set[str], set[str]]:
+        use: set[str] = set()
+        defined: set[str] = set()
+        for op in blk.ops:
+            for r in op_reads(op):
+                if r not in defined:
+                    use.add(r)
+            defined.update(op_writes(op))
+        for r in term_reads(blk.term):
+            if r not in defined:
+                use.add(r)
+        return use, defined
+
+    def _solve(self) -> None:
+        func = self.func
+        n = len(func.blocks)
+        use_def = [self._block_use_def(b) for b in func.blocks]
+        # Function outputs are live at every Return.
+        out_live = set(func.outputs)
+        changed = True
+        while changed:
+            changed = False
+            for i in range(n - 1, -1, -1):
+                term = func.blocks[i].term
+                if isinstance(term, ir.Return):
+                    new_out = set(out_live)
+                else:
+                    new_out = set()
+                    for s in ir.successors(func.blocks, i):
+                        new_out |= self.live_in[s]
+                use, defined = use_def[i]
+                new_in = use | (new_out - defined)
+                if new_out != self.live_out[i] or new_in != self.live_in[i]:
+                    self.live_out[i] = new_out
+                    self.live_in[i] = new_in
+                    changed = True
+
+    def live_after(self, block_idx: int, op_idx: int) -> set[str]:
+        """Variables live immediately after op ``op_idx`` in ``block_idx``."""
+        blk = self.func.blocks[block_idx]
+        live = set(self.live_out[block_idx])
+        for r in term_reads(blk.term):
+            live.add(r)
+        for j in range(len(blk.ops) - 1, op_idx, -1):
+            op = blk.ops[j]
+            live -= set(op_writes(op))
+            live |= set(op_reads(op))
+        return live
+
+
+# --------------------------------------------------------------------------
+# Call graph / recursion structure
+# --------------------------------------------------------------------------
+
+
+class CallGraph:
+    def __init__(self, program: ir.Program):
+        self.edges: dict[str, set[str]] = {f: set() for f in program.functions}
+        for fname, func in program.functions.items():
+            for blk in func.blocks:
+                for op in blk.ops:
+                    if isinstance(op, ir.Call):
+                        self.edges[fname].add(op.callee)
+        self._reach: dict[str, set[str]] = {}
+        for f in self.edges:
+            self._reach[f] = self._reachable(f)
+
+    def _reachable(self, f: str) -> set[str]:
+        seen: set[str] = set()
+        stack = list(self.edges[f])
+        while stack:
+            g = stack.pop()
+            if g in seen:
+                continue
+            seen.add(g)
+            stack.extend(self.edges[g])
+        return seen
+
+    def can_reenter(self, caller: str, callee: str) -> bool:
+        """Can a call from ``caller`` to ``callee`` lead back into ``caller``?
+
+        If so, the caller must save (push) its live variables around the call.
+        """
+        return caller == callee or caller in self._reach[callee]
+
+    def is_recursive(self, callee: str) -> bool:
+        """Can ``callee`` transitively have two live frames at once?
+
+        If so, arguments must be pushed onto the parameter stacks (burying the
+        outer frame's values) rather than overwriting the tops.
+        """
+        return callee in self._reach[callee]
+
+
+# --------------------------------------------------------------------------
+# Type inference
+# --------------------------------------------------------------------------
+
+
+def _spec_of(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _specs_eq(a: jax.ShapeDtypeStruct, b: jax.ShapeDtypeStruct) -> bool:
+    return a.shape == b.shape and a.dtype == b.dtype
+
+
+def infer_types(program: ir.Program) -> None:
+    """Forward abstract interpretation filling ``Function.var_specs``.
+
+    Function parameter and output specs are declared; locals are inferred by
+    running each ``Prim.fn`` through ``jax.eval_shape``.  Merge points must
+    agree exactly (we do not insert casts — the frontends emit explicit
+    casts where needed).
+    """
+    for func in program.functions.values():
+        specs: dict[str, jax.ShapeDtypeStruct] = dict(func.param_specs)
+        pending = True
+        guard = 0
+        while pending:
+            pending = False
+            guard += 1
+            if guard > len(func.blocks) * 4 + 16:
+                missing = _missing_vars(func, specs)
+                raise TypeError(
+                    f"{func.name}: type inference did not converge; "
+                    f"unresolved variables: {sorted(missing)}"
+                )
+            for blk in func.blocks:
+                for op in blk.ops:
+                    if isinstance(op, ir.Prim):
+                        if not all(i in specs for i in op.ins):
+                            if not all(o in specs for o in op.outs):
+                                pending = True
+                            continue
+                        in_specs = [specs[i] for i in op.ins]
+                        if op.batched:
+                            # batched prims consume/produce a leading batch
+                            # axis; type-check at batch size 1 and strip it.
+                            in_specs = [
+                                jax.ShapeDtypeStruct((1,) + tuple(s.shape),
+                                                     s.dtype)
+                                for s in in_specs
+                            ]
+                        try:
+                            out = jax.eval_shape(op.fn, *in_specs)
+                        except Exception as e:  # pragma: no cover - error path
+                            raise TypeError(
+                                f"{func.name}: cannot type primitive "
+                                f"{op.name!r}({op.ins}): {e}"
+                            ) from e
+                        outs = out if isinstance(out, tuple) else (out,)
+                        if op.batched:
+                            for o in outs:
+                                if not o.shape or o.shape[0] != 1:
+                                    raise TypeError(
+                                        f"{func.name}: batched primitive "
+                                        f"{op.name!r} output lost its batch "
+                                        f"axis: {o.shape}"
+                                    )
+                            outs = tuple(
+                                jax.ShapeDtypeStruct(o.shape[1:], o.dtype)
+                                for o in outs
+                            )
+                        if len(outs) != len(op.outs):
+                            raise TypeError(
+                                f"{func.name}: primitive {op.name!r} returned "
+                                f"{len(outs)} values for {len(op.outs)} outputs"
+                            )
+                        for name, o in zip(op.outs, outs):
+                            _bind(specs, name, _spec_of(o), func.name)
+                    elif isinstance(op, ir.Call):
+                        callee = program.functions[op.callee]
+                        for name, oname in zip(op.outs, callee.outputs):
+                            _bind(
+                                specs,
+                                name,
+                                callee.output_specs[oname],
+                                func.name,
+                            )
+        # Declared output specs must match inferred ones.
+        for oname in func.outputs:
+            declared = func.output_specs[oname]
+            if oname in specs and not _specs_eq(specs[oname], declared):
+                raise TypeError(
+                    f"{func.name}: output {oname!r} declared "
+                    f"{declared} but inferred {specs[oname]}"
+                )
+            specs[oname] = declared
+        func.var_specs = specs
+
+
+def _bind(specs, name, spec, fname) -> None:
+    if name in specs and not _specs_eq(specs[name], spec):
+        raise TypeError(
+            f"{fname}: variable {name!r} assigned conflicting types "
+            f"{specs[name]} vs {spec} (merge points must agree)"
+        )
+    specs[name] = spec
+
+
+def _missing_vars(func: ir.Function, specs) -> set[str]:
+    missing: set[str] = set()
+    for blk in func.blocks:
+        for op in blk.ops:
+            missing |= {o for o in op.outs if o not in specs}
+    return missing
+
+
+def all_vars(func: ir.Function) -> set[str]:
+    vs: set[str] = set(func.params) | set(func.outputs)
+    for blk in func.blocks:
+        for op in blk.ops:
+            vs.update(op.ins)
+            vs.update(op.outs)
+        vs.update(term_reads(blk.term))
+    return vs

@@ -1,0 +1,125 @@
+"""Public API of the autobatching core.
+
+    from repro.core import api, frontend
+
+    pb = frontend.ProgramBuilder()
+    ... build functions ...
+    program = pb.build()
+
+    batched = api.autobatch(program, batch_size=1024, backend="pc")
+    result = batched(inputs)          # dict of [batch, ...] outputs
+
+Backends
+--------
+``pc``           Program-counter autobatching (Algorithm 2): one fused
+                 ``lax.while_loop`` — compiles end-to-end with XLA, batches
+                 across recursion depths.  The paper's contribution.
+``local``        Local static autobatching (Algorithm 1), "hybrid" flavor:
+                 host-Python control, jitted block bodies.
+``local_eager``  Local static autobatching with op-by-op dispatch (the
+                 paper's eager arm).
+``reference``    Unbatched oracle (per-member Python recursion).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from . import ir, local_static, lowering, pc_vm, reference
+
+BACKENDS = ("pc", "local", "local_eager", "reference")
+
+
+class BatchedProgram:
+    def __init__(
+        self,
+        program: ir.Program,
+        batch_size: int,
+        backend: str = "pc",
+        max_depth: int = 32,
+        max_steps: int = 1_000_000,
+        use_kernel: bool = False,
+        collect_stats: bool = True,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self.program = program
+        self.backend = backend
+        self.batch_size = batch_size
+        self.main = program.functions[program.main]
+        self.last_result: Optional[pc_vm.VMResult] = None
+        if backend == "pc":
+            self.lowered = lowering.lower(program)
+            self.vm = pc_vm.ProgramCounterVM(
+                self.lowered,
+                pc_vm.VMConfig(
+                    batch_size=batch_size,
+                    max_depth=max_depth,
+                    max_steps=max_steps,
+                    use_kernel=use_kernel,
+                    collect_block_stats=collect_stats,
+                ),
+            )
+        elif backend in ("local", "local_eager"):
+            self.batcher = local_static.LocalStaticBatcher(
+                program, batch_size, jit_blocks=(backend == "local")
+            )
+        # "reference" needs no preparation.
+
+    def __call__(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        if self.backend == "pc":
+            # Qualify input names for the merged namespace.
+            q = {
+                ir.qualify(self.program.main, k): v for k, v in inputs.items()
+            }
+            res = self.vm.run(q)
+            self.last_result = res
+            return {
+                k.split("/", 1)[1]: v for k, v in res.outputs.items()
+            }
+        if self.backend in ("local", "local_eager"):
+            return self.batcher.run(inputs)
+        return reference.run_reference_batch(self.program, inputs)
+
+    # ------------------------------------------------------------------
+    # Introspection / AOT
+    # ------------------------------------------------------------------
+
+    def lower_aot(self, inputs: dict[str, Any]):
+        """AOT-lower the full batched computation (pc backend only)."""
+        if self.backend != "pc":
+            raise ValueError("AOT lowering requires the 'pc' backend")
+        q = {ir.qualify(self.program.main, k): v for k, v in inputs.items()}
+        return self.vm.lower(q)
+
+    @property
+    def utilization(self) -> dict[str, float]:
+        """Per-tag batch utilization of the last pc-backend run.
+
+        utilization(tag) = active_member_evals / (executions * batch_size),
+        the quantity plotted in the paper's Figure 6.
+        """
+        if self.backend == "pc":
+            if self.last_result is None:
+                return {}
+            return {
+                tag: act / (ex * self.batch_size) if ex else 0.0
+                for tag, (ex, act) in self.last_result.tag_stats.items()
+            }
+        if self.backend in ("local", "local_eager"):
+            st = self.batcher.stats
+            return {
+                tag: st.tag_active.get(tag, 0)
+                / (st.tag_execs[tag] * self.batch_size)
+                if st.tag_execs.get(tag)
+                else 0.0
+                for tag in st.tag_execs
+            }
+        return {}
+
+
+def autobatch(
+    program: ir.Program, batch_size: int, backend: str = "pc", **kw
+) -> BatchedProgram:
+    return BatchedProgram(program, batch_size, backend=backend, **kw)

@@ -1,0 +1,329 @@
+"""Program-counter autobatching VM (paper Algorithm 2), TPU-native.
+
+The whole batched program executes as ONE ``jax.lax.while_loop`` whose body
+
+  1. picks the earliest block index any live member's pc-top points at,
+  2. dispatches to that block's fused body via ``jax.lax.switch``,
+  3. masks all state updates to the locally-active members.
+
+Because recursion is materialized into fixed-shape ``[depth, batch, ...]``
+stack arrays, the VM contains no host control flow at all: it jits, lowers
+and compiles like any other XLA program, and members at *different stack
+depths* batch together whenever their pc-tops coincide (the paper's central
+contribution).
+
+Primitive-execution strategy is *masking* (`jnp.where` selects), which is
+the TPU-friendly choice (see DESIGN.md §2).  Stack traffic — the only
+gathers/scatters — is confined to pushes and pops thanks to the top-of-stack
+cache (paper opt. iv), and can be routed through the Pallas ``stack_ops``
+kernel on TPU (``use_kernel=True``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import ir
+
+Array = jax.Array
+_I32 = jnp.int32
+
+
+def _bcast(mask: Array, val: Array) -> Array:
+    """Broadcast a [Z] bool mask against a [Z, ...] value."""
+    return mask.reshape(mask.shape + (1,) * (val.ndim - 1))
+
+
+def _masked(mask: Array, new: Array, old: Array) -> Array:
+    return jnp.where(_bcast(mask, new), new, old)
+
+
+def _scatter_push(stack: Array, ptr: Array, val: Array, mask: Array) -> Array:
+    """Bury ``val`` at depth ``ptr`` for active rows. stack: [D, Z, ...]."""
+    z = stack.shape[1]
+    rows = jnp.where(mask, ptr, stack.shape[0])  # OOB rows dropped
+    return stack.at[rows, jnp.arange(z)].set(val, mode="drop")
+
+
+def _gather_top(stack: Array, ptr: Array) -> Array:
+    z = stack.shape[1]
+    return stack[jnp.clip(ptr, 0, stack.shape[0] - 1), jnp.arange(z)]
+
+
+@dataclass(frozen=True)
+class VMConfig:
+    batch_size: int
+    max_depth: int = 32  # stack slots (usable call depth = max_depth - 1)
+    max_steps: int = 1_000_000
+    use_kernel: bool = False  # route stack traffic through Pallas stack_ops
+    collect_block_stats: bool = True
+
+
+@dataclass
+class VMResult:
+    outputs: dict[str, Array]
+    steps: Array
+    converged: Array  # bool: all members halted within max_steps
+    block_exec: Optional[Array]  # [num_blocks] times each block ran
+    block_active: Optional[Array]  # [num_blocks] total active members
+    tag_stats: dict[str, tuple[int, int]]  # tag -> (execs, active) post-run
+
+
+class ProgramCounterVM:
+    """Compiled batched executor for a :class:`ir.LoweredProgram`."""
+
+    def __init__(self, lowered: ir.LoweredProgram, config: VMConfig):
+        self.lowered = lowered
+        self.config = config
+        self.num_blocks = len(lowered.blocks)
+        self._state_vars = [
+            v
+            for v in sorted(lowered.var_specs)
+            if v not in lowered.temp_vars
+        ]
+        self._block_fns = [
+            self._make_block_fn(i, blk) for i, blk in enumerate(lowered.blocks)
+        ]
+        # tag -> [(block_idx, multiplicity)] for post-run instrumentation.
+        self._tag_blocks: dict[str, list[tuple[int, int]]] = {}
+        for i, blk in enumerate(lowered.blocks):
+            for op in blk.ops:
+                if isinstance(op, ir.LPrim) and op.tag:
+                    entry = self._tag_blocks.setdefault(op.tag, [])
+                    entry.append((i, 1))
+        self._jitted = jax.jit(self._run)
+
+    # ------------------------------------------------------------------
+    # State construction
+    # ------------------------------------------------------------------
+
+    def init_state(self, inputs: dict[str, Array]) -> dict[str, Any]:
+        cfg = self.config
+        z, d = cfg.batch_size, cfg.max_depth
+        lp = self.lowered
+        tops: dict[str, Array] = {}
+        stacks: dict[str, Array] = {}
+        ptrs: dict[str, Array] = {}
+        for v in self._state_vars:
+            spec = lp.var_specs[v]
+            tops[v] = jnp.zeros((z,) + tuple(spec.shape), spec.dtype)
+            if v in lp.stack_vars:
+                stacks[v] = jnp.zeros((d, z) + tuple(spec.shape), spec.dtype)
+                ptrs[v] = jnp.zeros((z,), _I32)
+        for p in lp.main_params:
+            x = jnp.asarray(inputs[p])
+            if x.shape != (z,) + tuple(lp.var_specs[p].shape):
+                raise ValueError(
+                    f"input {p!r}: expected batched shape "
+                    f"{(z,) + tuple(lp.var_specs[p].shape)}, got {x.shape}"
+                )
+            tops[p] = x.astype(lp.var_specs[p].dtype)
+        pc_stack = jnp.full((d, z), lp.exit_index, _I32)
+        state = {
+            "pc_top": jnp.full((z,), lp.entry, _I32),
+            "pc_stack": pc_stack,  # slot 0 holds the exit sentinel
+            "pc_ptr": jnp.ones((z,), _I32),
+            "tops": tops,
+            "stacks": stacks,
+            "ptrs": ptrs,
+            "steps": jnp.zeros((), _I32),
+        }
+        if self.config.collect_block_stats:
+            state["block_exec"] = jnp.zeros((self.num_blocks,), _I32)
+            state["block_active"] = jnp.zeros((self.num_blocks,), _I32)
+        return state
+
+    # ------------------------------------------------------------------
+    # Block body compilation
+    # ------------------------------------------------------------------
+
+    def _make_block_fn(self, bidx: int, blk: ir.LBlock) -> Callable:
+        lowered = self.lowered
+        temp_vars = lowered.temp_vars
+        use_kernel = self.config.use_kernel
+
+        if use_kernel:
+            from repro.kernels.stack_ops import ops as _sk
+
+        def run(state: dict[str, Any]) -> dict[str, Any]:
+            mask = state["pc_top"] == bidx
+            imask = mask.astype(_I32)
+            tops = dict(state["tops"])
+            stacks = dict(state["stacks"])
+            ptrs = dict(state["ptrs"])
+            temps: dict[str, Array] = {}
+
+            def read(v: str) -> Array:
+                return temps[v] if v in temp_vars else tops[v]
+
+            def write(v: str, val: Array) -> None:
+                if v in temp_vars:
+                    temps[v] = val
+                else:
+                    tops[v] = _masked(mask, val.astype(tops[v].dtype), tops[v])
+
+            for op in blk.ops:
+                if isinstance(op, ir.LPrim):
+                    if not op.ins and not op.batched:
+                        # Nullary primitive (constant): broadcast to the batch.
+                        z = mask.shape[0]
+                        outs = op.fn()
+                        outs = outs if isinstance(outs, tuple) else (outs,)
+                        outs = tuple(
+                            jnp.broadcast_to(
+                                jnp.asarray(o), (z,) + jnp.shape(jnp.asarray(o))
+                            )
+                            for o in outs
+                        )
+                    else:
+                        fn = op.fn if op.batched else jax.vmap(op.fn)
+                        outs = fn(*[read(i) for i in op.ins])
+                        if len(op.outs) == 1:
+                            outs = (outs,)
+                    for name, val in zip(op.outs, outs):
+                        write(name, val)
+                elif isinstance(op, ir.LPush):
+                    old_top = tops[op.var]
+                    if use_kernel:
+                        stacks[op.var] = _sk.masked_push(
+                            stacks[op.var], ptrs[op.var], old_top, mask
+                        )
+                    else:
+                        stacks[op.var] = _scatter_push(
+                            stacks[op.var], ptrs[op.var], old_top, mask
+                        )
+                    ptrs[op.var] = ptrs[op.var] + imask
+                    tops[op.var] = _masked(mask, read(op.src), old_top)
+                elif isinstance(op, ir.LPop):
+                    new_ptr = ptrs[op.var] - imask
+                    if use_kernel:
+                        restored = _sk.masked_peek(stacks[op.var], new_ptr)
+                    else:
+                        restored = _gather_top(stacks[op.var], new_ptr)
+                    tops[op.var] = _masked(mask, restored, tops[op.var])
+                    ptrs[op.var] = new_ptr
+                else:  # pragma: no cover
+                    raise AssertionError(op)
+
+            pc_top = state["pc_top"]
+            pc_stack = state["pc_stack"]
+            pc_ptr = state["pc_ptr"]
+            t = blk.term
+            if isinstance(t, ir.LJump):
+                pc_top = jnp.where(mask, t.target, pc_top)
+            elif isinstance(t, ir.LBranch):
+                cond = read(t.var)
+                pc_top = jnp.where(
+                    mask, jnp.where(cond, t.true, t.false), pc_top
+                )
+            elif isinstance(t, ir.LPushJump):
+                # Bury the return address; jump to the callee entry.
+                ret = jnp.full_like(pc_top, t.ret)
+                pc_stack = _scatter_push(pc_stack, pc_ptr, ret, mask)
+                pc_ptr = pc_ptr + imask
+                pc_top = jnp.where(mask, t.target, pc_top)
+            elif isinstance(t, ir.LReturn):
+                new_ptr = pc_ptr - imask
+                restored = _gather_top(pc_stack, new_ptr)
+                pc_top = jnp.where(mask, restored, pc_top)
+                pc_ptr = new_ptr
+            else:  # pragma: no cover
+                raise AssertionError(t)
+
+            out = dict(state)
+            out.update(
+                pc_top=pc_top,
+                pc_stack=pc_stack,
+                pc_ptr=pc_ptr,
+                tops=tops,
+                stacks=stacks,
+                ptrs=ptrs,
+            )
+            return out
+
+        return run
+
+    # ------------------------------------------------------------------
+    # The VM loop
+    # ------------------------------------------------------------------
+
+    def _run(self, inputs: dict[str, Array]) -> dict[str, Any]:
+        lp = self.lowered
+        exit_idx = lp.exit_index
+        state = self.init_state(inputs)
+
+        def cond(state):
+            return jnp.logical_and(
+                state["steps"] < self.config.max_steps,
+                jnp.any(state["pc_top"] < exit_idx),
+            )
+
+        def body(state):
+            pc_top = state["pc_top"]
+            live = pc_top < exit_idx
+            # Earliest-block heuristic (Algorithm 1/2's block choice).
+            i = jnp.min(jnp.where(live, pc_top, exit_idx)).astype(_I32)
+            if self.config.collect_block_stats:
+                active = jnp.sum((pc_top == i).astype(_I32))
+                state = dict(state)
+                state["block_exec"] = state["block_exec"].at[i].add(1)
+                state["block_active"] = state["block_active"].at[i].add(active)
+            state = lax.switch(i, self._block_fns, state)
+            state = dict(state)
+            state["steps"] = state["steps"] + 1
+            return state
+
+        return lax.while_loop(cond, body, state)
+
+    def run(self, inputs: dict[str, Array]) -> VMResult:
+        """Execute the batched program to completion (jitted end-to-end)."""
+        state = self._jitted(inputs)
+        return self._result(state)
+
+    def _result(self, state) -> VMResult:
+        lp = self.lowered
+        outputs = {o: state["tops"][o] for o in lp.main_outputs}
+        converged = jnp.all(state["pc_top"] >= lp.exit_index)
+        block_exec = state.get("block_exec")
+        block_active = state.get("block_active")
+        tag_stats: dict[str, tuple[int, int]] = {}
+        if block_exec is not None:
+            be = jax.device_get(block_exec)
+            ba = jax.device_get(block_active)
+            for tag, entries in self._tag_blocks.items():
+                execs = sum(int(be[b]) * m for b, m in entries)
+                active = sum(int(ba[b]) * m for b, m in entries)
+                tag_stats[tag] = (execs, active)
+        return VMResult(
+            outputs=outputs,
+            steps=state["steps"],
+            converged=converged,
+            block_exec=block_exec,
+            block_active=block_active,
+            tag_stats=tag_stats,
+        )
+
+    # ------------------------------------------------------------------
+    # AOT entry points (for dry-runs and benchmarking)
+    # ------------------------------------------------------------------
+
+    def lower(self, inputs: dict[str, Array]):
+        return self._jitted.lower(inputs)
+
+    def step_fn(self) -> Callable:
+        """One VM step as a standalone jittable function of the state."""
+
+        def step(state):
+            pc_top = state["pc_top"]
+            live = pc_top < self.lowered.exit_index
+            i = jnp.min(
+                jnp.where(live, pc_top, self.lowered.exit_index)
+            ).astype(_I32)
+            return lax.switch(i, self._block_fns, state)
+
+        return step

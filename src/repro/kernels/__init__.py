@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+``stack_ops``       — the PC VM's batched stack push/peek (the paper's
+                      gather/scatter hot spot), driven by scalar-prefetched
+                      stack pointers so each lane moves only its own row.
+``flash_attention`` — causal GQA attention for train/prefill.
+``flash_decode``    — single-token attention over long KV caches (decode).
+
+Each package ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit wrapper with CPU interpret fallback) and ``ref.py`` (pure-jnp oracle);
+tests sweep shapes/dtypes and assert allclose in interpret mode.
+"""
+from . import flash_attention, flash_decode, stack_ops  # noqa: F401

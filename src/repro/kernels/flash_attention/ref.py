@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True) -> jax.Array:
+    """q: [B, S, H, Dh]; k, v: [B, T, Hkv, Dh] -> [B, S, H, Dh]."""
+    b, s, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, dh)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, dh)

@@ -1,0 +1,31 @@
+"""Jitted wrapper for decode attention ([B, H, Dh] query layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, Dh]
+    k: jax.Array,  # [B, W, Hkv, Dh]
+    v: jax.Array,
+    count: jax.Array,  # [B]
+    *,
+    block_k: int = 256,
+) -> jax.Array:
+    b, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, hk, g, dh)
+    kt = jnp.swapaxes(k, 1, 2)  # [B, Hkv, W, Dh]
+    vt = jnp.swapaxes(v, 1, 2)
+    out = kernel.decode_attention(
+        qg, kt, vt, count, block_k=block_k, interpret=not _is_tpu()
+    )
+    return out.reshape(b, h, dh)

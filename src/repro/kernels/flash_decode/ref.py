@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, Dh] (one new token per sequence)
+    k: jax.Array,  # [B, W, Hkv, Dh]
+    v: jax.Array,  # [B, W, Hkv, Dh]
+    count: jax.Array,  # [B] number of valid cache entries
+) -> jax.Array:
+    b, h, dh = q.shape
+    w, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, hk, g, dh)
+    s = jnp.einsum(
+        "bkgd,bwkd->bkgw", qg, k, preferred_element_type=jnp.float32
+    ) / np.sqrt(dh)
+    valid = jnp.arange(w)[None] < count[:, None]  # [B, W]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bwkd->bkgd", p.astype(v.dtype), v)
+    return out.reshape(b, h, dh)

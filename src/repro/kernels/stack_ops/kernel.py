@@ -1,0 +1,102 @@
+"""Pallas TPU kernels for the PC VM's batched stack traffic.
+
+The paper identifies per-variable stack pushes/pops as the cost of
+materializing recursion: a push scatters each active lane's value to its
+own depth; a pop/peek gathers from per-lane depths.  XLA lowers these to
+generic scatter/gather, which on TPU serializes badly.  The TPU-native
+formulation used here drives the data movement from *scalar-prefetched*
+stack pointers: the grid iterates over batch lanes, and each lane's
+``BlockSpec`` index_map picks exactly the ``[1, 1, F]`` stack row addressed
+by ``ptr[z]`` — so each push/peek moves only ``F`` elements per lane
+between HBM and VMEM (the minimum), with no scatter at all.
+
+Layout note: the feature axis is last (lane-contiguous, ideally a multiple
+of 128); depth × batch are leading so a lane's row is a contiguous stripe.
+Masked pushes select between the new value and the resident row inside
+VMEM (select is free on the VPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# push
+# ---------------------------------------------------------------------------
+
+
+def _push_kernel(ptr_ref, mask_ref, val_ref, row_in_ref, row_out_ref):
+    z = pl.program_id(0)
+    active = mask_ref[z]
+    # val/row blocks are [1, F] for this lane's target depth.
+    new = jnp.where(active, val_ref[...], row_in_ref[...])
+    row_out_ref[...] = new
+
+
+def masked_push(stack: jax.Array, ptr: jax.Array, val: jax.Array,
+                mask: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """stack: [D, Z, F]; ptr, mask: [Z]; val: [Z, F]."""
+    d, z, f = stack.shape
+    clipped = jnp.clip(ptr, 0, d - 1).astype(jnp.int32)
+    # Drop pushes whose pointer is out of range (VM guards this anyway).
+    mask = jnp.logical_and(mask, jnp.logical_and(ptr >= 0, ptr < d))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # ptr, mask
+        grid=(z,),
+        in_specs=[
+            pl.BlockSpec((1, f), lambda i, ptr, mask: (i, 0)),  # val row
+            pl.BlockSpec(  # resident stack row at [ptr[i], i]
+                (1, 1, f), lambda i, ptr, mask: (ptr[i], i, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, f), lambda i, ptr, mask: (ptr[i], i, 0)
+        ),
+    )
+    fn = pl.pallas_call(
+        _push_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(stack.shape, stack.dtype),
+        # operand order includes the scalar-prefetch args: the stack (arg 3)
+        # aliases the output buffer, so unwritten rows are never copied.
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )
+    return fn(clipped, mask, val.reshape(z, f).astype(stack.dtype), stack)
+
+
+# ---------------------------------------------------------------------------
+# peek (pop's data movement; pointer arithmetic stays in the VM)
+# ---------------------------------------------------------------------------
+
+
+def _peek_kernel(ptr_ref, row_ref, out_ref):
+    out_ref[...] = row_ref[0]
+
+
+def masked_peek(stack: jax.Array, ptr: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """stack: [D, Z, F]; ptr: [Z] -> [Z, F] = stack[ptr[z], z]."""
+    d, z, f = stack.shape
+    clipped = jnp.clip(ptr, 0, d - 1).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(z,),
+        in_specs=[
+            pl.BlockSpec((1, 1, f), lambda i, ptr: (ptr[i], i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, f), lambda i, ptr: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        _peek_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((z, f), stack.dtype),
+        interpret=interpret,
+    )
+    return fn(clipped, stack)

@@ -1,0 +1,44 @@
+"""Jitted wrappers for the stack kernels, handling arbitrary feature
+shapes (the VM pushes values of any rank) and the CPU/interpret fallback.
+
+On CPU we *validate* the Pallas kernels in interpret mode; the VM's
+default (`use_kernel=False`) uses the jnp reference, which XLA compiles
+to the same scatter/gather it would on TPU.  `use_kernel=True` routes
+through `pallas_call` (interpret on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten_features(x: jax.Array, lead: int):
+    feat = x.shape[lead:]
+    f = 1
+    for s in feat:
+        f *= s
+    return x.reshape(x.shape[:lead] + (max(f, 1),)), feat
+
+
+def masked_push(stack: jax.Array, ptr: jax.Array, val: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    """stack: [D, Z, ...]; ptr/mask: [Z]; val: [Z, ...]."""
+    d, z = stack.shape[:2]
+    s2, feat = _flatten_features(stack, 2)
+    v2, _ = _flatten_features(val, 1)
+    out = kernel.masked_push(s2, ptr, v2, mask, interpret=not _is_tpu())
+    return out.reshape(stack.shape)
+
+
+def masked_peek(stack: jax.Array, ptr: jax.Array) -> jax.Array:
+    """stack: [D, Z, ...]; ptr: [Z] -> [Z, ...]."""
+    d, z = stack.shape[:2]
+    s2, feat = _flatten_features(stack, 2)
+    out = kernel.masked_peek(s2, ptr, interpret=not _is_tpu())
+    return out.reshape((z,) + stack.shape[2:])

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the batched stack operations (paper Alg. 2's
+PUSH/POP data movement — the hot spot of the PC VM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_push(stack: jax.Array, ptr: jax.Array, val: jax.Array,
+                mask: jax.Array) -> jax.Array:
+    """stack: [D, Z, F...]; ptr, mask: [Z]; val: [Z, F...].
+
+    For active rows z, write ``val[z]`` at depth ``ptr[z]``.
+    """
+    z = stack.shape[1]
+    d = stack.shape[0]
+    ok = jnp.logical_and(mask, jnp.logical_and(ptr >= 0, ptr < d))
+    rows = jnp.where(ok, ptr, d)  # OOB rows dropped (incl. negatives)
+    return stack.at[rows, jnp.arange(z)].set(val, mode="drop")
+
+
+def masked_peek(stack: jax.Array, ptr: jax.Array) -> jax.Array:
+    """stack: [D, Z, F...]; ptr: [Z] -> [Z, F...] (stack[ptr[z], z])."""
+    z = stack.shape[1]
+    return stack[jnp.clip(ptr, 0, stack.shape[0] - 1), jnp.arange(z)]

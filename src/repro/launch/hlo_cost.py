@@ -1,0 +1,393 @@
+"""Loop-aware static cost analysis over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a ``while``
+body (every ``lax.scan``/``fori_loop``) is counted a single time no
+matter its trip count, so scanned production graphs under-report FLOPs,
+bytes and collectives by ~the layer count.  This module re-derives the
+three roofline inputs with loop awareness:
+
+1. parse the HLO module into computations and instructions, recording
+   each instruction's result shape (operand references are resolved
+   through a per-computation name -> shape map, since post-optimization
+   HLO does not print operand types inline);
+2. build the call graph (``while`` body/cond, fusions, ``to_apply``,
+   branches) and recover each while loop's trip count from the integer
+   constant in its condition computation (counted ``lax`` loops lower to
+   ``iv < N`` with ``N`` materialized as an ``s32[] constant`` there);
+3. propagate execution multipliers from ENTRY;
+4. account per executed instruction:
+   * FLOPs: ``dot`` ops (2 x prod(result dims) x prod(lhs contraction
+     dims)), wherever they live (fusion bodies included);
+   * HBM bytes: result + operand bytes of top-level instructions of
+     executed computations (fusion internals excluded — fused
+     intermediates stay on-chip);
+   * collective bytes: result bytes of all-reduce / all-gather /
+     reduce-scatter / all-to-all / collective-permute, times the
+     multiplier.
+
+Shapes in post-partitioning HLO are per-device, so all totals are
+per-chip.  Validated against fully-unrolled lowerings in
+tests/test_dryrun.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(
+    r"^(\(?[\w\[\],{}\s/\*=]*?\)?)\s*([a-z][\w\-]*)\("
+)
+_CALLED_RE = re.compile(
+    r"(?:condition|body|to_apply|calls|branch_computations)="
+    r"(?:%([\w\.\-]+)|\{([^}]*)\})"
+)
+_CONST_INT_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "copy-start", "copy-done", "iota", "partition-id",
+    "replica-id",
+}
+
+
+def _parse_shapes(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append(
+                (dt, tuple(int(x) for x in dims.split(",")) if dims else ())
+            )
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_shapes: list
+    operand_names: list
+    called: list
+    meta: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # var name -> shape list
+    int_constants: list = field(default_factory=list)
+    is_fusion_body: bool = False
+
+
+def parse_module(text: str) -> tuple[dict[str, "Computation"], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith("//"):
+            continue
+        stripped = line.strip()
+        # computation header: [ENTRY] %name (...) -> ... {
+        if not line.startswith("  ") and "->" in line and line.endswith("{"):
+            is_entry = stripped.startswith("ENTRY")
+            header = stripped[5:].strip() if is_entry else stripped
+            m = re.match(r"^%?([\w\.\-]+)\s*\(", header)
+            if m:
+                cur = Computation(name=m.group(1))
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        mo = _OPCODE_RE.match(rhs)
+        if not mo:
+            continue
+        restype, opcode = mo.group(1), mo.group(2)
+        # operands: between the op's '(' and its matching ')'
+        paren = rhs[mo.end() - 1:]
+        depth, end = 0, len(paren) - 1
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = paren[1:end]
+        meta = paren[end + 1:]
+        called = []
+        for m1, m2 in _CALLED_RE.findall(meta):
+            if m1:
+                called.append(m1)
+            elif m2:
+                called.extend(
+                    c.strip().lstrip("%") for c in m2.split(",") if c.strip()
+                )
+        result_shapes = _parse_shapes(restype)
+        ins = Instruction(
+            name=name,
+            opcode=opcode,
+            result_shapes=result_shapes,
+            operand_names=re.findall(r"%([\w\.\-]+)", operands),
+            called=called,
+            meta=meta,
+        )
+        cur.instructions.append(ins)
+        cur.shapes[name] = result_shapes
+        cm = _CONST_INT_RE.search(line)
+        if cm:
+            cur.int_constants.append(int(cm.group(1)))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Counted jax loops put the bound as the sole s32 constant in the
+    condition computation (``iv < N``)."""
+    if cond.int_constants:
+        return max(cond.int_constants)
+    return None
+
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    result = 1.0
+    if ins.result_shapes:
+        for d in ins.result_shapes[0][1]:
+            result *= d
+    contract = 1.0
+    m = _DOT_CONTRACT_RE.search(ins.meta)
+    if m and ins.operand_names:
+        lhs_shapes = comp.shapes.get(ins.operand_names[0])
+        if lhs_shapes:
+            lhs_dims = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                if idx != "" and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
+    return 2.0 * result * contract
+
+
+@dataclass
+class LoopAwareCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: dict = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+    dot_count: int = 0
+    # bytes attributed to jax named_scope labels (substring of op_name)
+    scope_bytes: dict = field(default_factory=dict)
+    scope_flops: dict = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+
+def _fusion_operand_bytes(ins: Instruction, comp: Computation,
+                          comps: dict) -> float:
+    """Operand traffic of a fusion, window-aware.
+
+    A fusion that internally dynamic-slices one of its operands (the
+    per-layer weight slice inside a scanned stack, the cache window in
+    decode) only reads the WINDOW from HBM, not the whole buffer; charging
+    the full operand over-counts stacked-parameter traffic by ~num_layers.
+    For each fusion parameter whose every in-body consumer is a
+    (dynamic-)slice/gather, charge the consumers' result sizes instead.
+    """
+    total = 0.0
+    body = None
+    for c in ins.called:
+        if c in comps:
+            body = comps[c]
+            break
+    body_params = (
+        [bi.name for bi in body.instructions if bi.opcode == "parameter"]
+        if body is not None else []
+    )
+    for idx, opname in enumerate(ins.operand_names):
+        full = _bytes_of(comp.shapes.get(opname, ()))
+        if body is None or idx >= len(body_params):
+            total += full
+            continue
+        pname = body_params[idx]
+        consumers = [
+            bi for bi in body.instructions if pname in bi.operand_names
+        ]
+        if consumers and all(
+            c.opcode in ("dynamic-slice", "slice", "gather",
+                         "dynamic-update-slice")
+            for c in consumers
+        ):
+            total += sum(_bytes_of(c.result_shapes) for c in consumers)
+        else:
+            total += full
+    return total
+
+
+def _instr_bytes(ins: Instruction, comp: Computation,
+                 comps: Optional[dict] = None) -> float:
+    """HBM traffic model per op.
+
+    Slicing/indexed ops move only the slice, not the buffer they index
+    into (dynamic-slice reads its window; dynamic-update-slice writes its
+    window in place — XLA aliases the big operand).  Everything else uses
+    the standard result + operands convention.
+    """
+    res = _bytes_of(ins.result_shapes)
+    op = ins.opcode
+    if op == "fusion" and comps is not None:
+        return res + _fusion_operand_bytes(ins, comp, comps)
+    if op in ("dynamic-slice", "slice"):
+        return 2.0 * res  # read window + write result
+    if op == "dynamic-update-slice":
+        # update operand (index 1) read + window write
+        upd = 0
+        if len(ins.operand_names) > 1:
+            upd = _bytes_of(comp.shapes.get(ins.operand_names[1], ()))
+        return 2.0 * upd
+    if op == "gather":
+        idx = 0
+        if len(ins.operand_names) > 1:
+            idx = _bytes_of(comp.shapes.get(ins.operand_names[1], ()))
+        return 2.0 * res + idx
+    if op == "scatter":
+        upd = 0
+        if len(ins.operand_names) > 2:
+            upd = _bytes_of(comp.shapes.get(ins.operand_names[2], ()))
+        return 3.0 * upd  # read update + read/write target windows
+    if op == "broadcast":
+        return res  # operand is tiny by construction
+    if op == "while":
+        return 0.0  # carry traffic belongs to the body's ops
+    ops_bytes = sum(
+        _bytes_of(comp.shapes.get(o, ())) for o in ins.operand_names
+    )
+    return res + ops_bytes
+
+
+_SCOPE_RE = re.compile(r'op_name="[^"]*?([\w\-]+_core|moe_dispatch)[^"]*"')
+
+
+def analyze(hlo_text: str, default_trips: int = 1) -> LoopAwareCost:
+    comps, entry = parse_module(hlo_text)
+    cost = LoopAwareCost()
+    if entry is None:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return cost
+
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.opcode == "fusion":
+                for c in ins.called:
+                    if c in comps:
+                        comps[c].is_fusion_body = True
+
+    # propagate execution multipliers from ENTRY through the call graph
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                trips = None
+                for c in ins.called:
+                    if c in comps:
+                        t = _trip_count(comps[c])
+                        if t is not None:
+                            trips = t
+                            break
+                if trips is None:
+                    trips = default_trips
+                    cost.unknown_trip_loops += 1
+                child_mult = m * max(trips, 1)
+            else:
+                child_mult = m
+            for c in ins.called:
+                if c not in comps:
+                    continue
+                prev = mult.get(c)
+                if prev is None or child_mult > prev:
+                    mult[c] = child_mult
+                    if c not in order[i:]:
+                        order.append(c)
+    # account
+    for cname, comp in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        for ins in comp.instructions:
+            scope = None
+            sm = _SCOPE_RE.search(ins.meta)
+            if sm:
+                scope = sm.group(1)
+            if ins.opcode == "dot":
+                fl = _dot_flops(ins, comp) * m
+                cost.flops += fl
+                cost.dot_count += 1
+                if scope:
+                    cost.scope_flops[scope] = (
+                        cost.scope_flops.get(scope, 0.0) + fl
+                    )
+            if comp.is_fusion_body:
+                continue  # fused intermediates never touch HBM
+            if ins.opcode in _FREE_OPS:
+                continue
+            kind = next(
+                (k for k in _COLLECTIVES if ins.opcode.startswith(k)), None
+            )
+            nbytes = _bytes_of(ins.result_shapes)
+            if kind and not ins.opcode.endswith("-done"):
+                e = cost.collectives.setdefault(
+                    kind, {"count": 0, "bytes": 0.0}
+                )
+                e["count"] += m
+                e["bytes"] += nbytes * m
+            traffic = _instr_bytes(ins, comp, comps) * m
+            cost.bytes_accessed += traffic
+            if scope:
+                cost.scope_bytes[scope] = (
+                    cost.scope_bytes.get(scope, 0.0) + traffic
+                )
+    return cost

@@ -1,0 +1,226 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Scheme (Megatron-style TP x FSDP, EP for MoE, pure DP across pods):
+
+* logical axis ``tp``   -> mesh ``model``: attention head / FFN column /
+  expert-hidden dimensions (column-parallel in, row-parallel out — two
+  collectives per block);
+* logical axis ``fsdp`` -> mesh ``data``: every parameter's long
+  non-TP dimension (ZeRO-3: params, grads and optimizer state all shard
+  here and all-gather per layer inside the scan);
+* logical axis ``ep``   -> mesh ``model``: the expert axis of MoE weights
+  (expert parallelism; dispatch/combine lower to all-to-alls);
+* batch dims            -> ``("pod", "data")`` when multi-pod else
+  ``("data",)``;
+* decode KV caches      -> window axis over ``model`` (split-K decode),
+  batch axis over ``data``.
+
+Rules are regex -> logical template, right-aligned onto the trailing dims
+of each leaf (stacked layer axes lead and stay replicated).  Every
+proposed mesh axis is validated for divisibility and dropped (replicated)
+if it does not divide — small archs (e.g. 4-head xLSTM) degrade gracefully
+instead of failing to lower.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical -> mesh axes (tuples shard over multiple axes; axes missing
+# from the mesh are dropped, so "fsdp" is ZeRO across pods when the pod
+# axis exists and plain data-sharding on the single-pod mesh)
+LOGICAL = {"tp": ("model",), "fsdp": ("pod", "data"), "ep": ("model",)}
+
+# (regex over the flattened path, right-aligned logical template)
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # Embedding/unembedding shard the VOCAB dim only: sharding d_model over
+    # `data` here would put the gather indices (batch over `data`) in
+    # conflict with the table and make SPMD all-gather the *batch* — the
+    # one resolution that destroys data parallelism.
+    (r"embed/embedding$", ("tp", None)),
+    (r"embed/lm_head$", (None, "tp")),
+    (r"^lm_head$", (None, "tp")),  # audio head
+    # attention
+    (r"attn/w[qkv]$", ("fsdp", "tp")),
+    (r"attn/wo$", ("tp", "fsdp")),
+    (r"attn/b[qkv]$", ("tp",)),
+    (r"attn/[qk]_norm$", (None,)),
+    # dense FFN (swiglu / gelu)
+    (r"mlp/w[gu1]$", ("fsdp", "tp")),
+    (r"mlp/w[d2]$", ("tp", "fsdp")),
+    (r"mlp/b1$", ("tp",)),
+    (r"mlp/b2$", (None,)),
+    # MoE
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w[gu]$", ("ep", "fsdp", None)),
+    (r"moe/wd$", ("ep", None, "fsdp")),
+    (r"moe/shared/w[gu]$", ("fsdp", "tp")),
+    (r"moe/shared/wd$", ("tp", "fsdp")),
+    # mamba2
+    (r"mamba/w_in$", ("fsdp", "tp")),
+    (r"mamba/w_out$", ("tp", "fsdp")),
+    (r"mamba/conv_w$", (None, "tp")),
+    (r"mamba/conv_b$", ("tp",)),
+    (r"mamba/(dt_bias|a_log|d_skip)$", ("tp",)),
+    (r"mamba/gate_norm$", ("tp",)),
+    # xlstm mLSTM
+    (r"cell/w_up$", ("fsdp", "tp")),
+    (r"cell/w[qkv]$", (None, "tp")),
+    (r"cell/w_if$", (None, "tp")),
+    (r"cell/b_if$", ("tp",)),
+    (r"cell/conv_w$", (None, "tp")),
+    (r"cell/conv_b$", ("tp",)),
+    (r"cell/head_norm$", ("tp",)),
+    (r"cell/w_down$", ("tp", "fsdp")),
+    # xlstm sLSTM
+    (r"cell/w_gates$", ("fsdp", "tp")),
+    (r"cell/b_gates$", ("tp",)),
+    (r"cell/r_gates$", (None, None, None, None)),
+    # norms
+    (r"(ln1|ln2|ln|final_norm)/(scale|bias)$", (None,)),
+    # audio stub head adapter
+    (r"head/w[12]$", ("fsdp", "tp")),
+    (r"head/b[12]$", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fit(template: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Right-align the logical template onto the trailing dims; drop axes
+    that do not divide the corresponding dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    k = len(template)
+    if k > ndim:
+        template = template[k - ndim:]
+        k = ndim
+    for i, logical in enumerate(template):
+        dim = ndim - k + i
+        if logical is None:
+            continue
+        axes = tuple(a for a in LOGICAL[logical] if a in sizes)
+        if not axes:
+            continue
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if shape[dim] % total == 0 and shape[dim] >= total:
+            spec[dim] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def param_spec(path_str: str, shape: tuple, mesh: Mesh) -> P:
+    for pattern, template in PARAM_RULES:
+        if re.search(pattern, path_str):
+            return _fit(template, shape, mesh)
+    # default: FSDP-shard the largest dim if divisible
+    if shape:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        big = int(np.argmax(shape))
+        if shape[big] % sizes["data"] == 0 and shape[big] >= sizes["data"]:
+            spec = [None] * len(shape)
+            spec[big] = "data"
+            return P(*spec)
+    return P()
+
+
+def param_shardings(params_shape: PyTree, mesh: Mesh) -> PyTree:
+    """NamedShardings for a parameter pytree (of arrays or SDS)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(_path_str(path), tuple(leaf.shape), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(opt_shape: PyTree, params_shape: PyTree, mesh: Mesh
+                        ) -> PyTree:
+    """ZeRO: mu/nu/error follow the param shardings; step is replicated."""
+    pshard = param_shardings(params_shape, mesh)
+    out = {"step": NamedSharding(mesh, P())}
+    for key in opt_shape:
+        if key == "step":
+            continue
+        out[key] = pshard
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batches and caches
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch_shape: PyTree, mesh: Mesh) -> PyTree:
+    """Shard the leading (batch) dim of every input over (pod, data)."""
+    daxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    total = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in daxes:
+        total *= sizes[a]
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % total == 0 and leaf.shape[0] >= total:
+            return NamedSharding(
+                mesh, P(daxes, *([None] * (len(leaf.shape) - 1)))
+            )
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: PyTree, batch_size: int, mesh: Mesh
+                    ) -> PyTree:
+    """Decode caches: batch axis -> data, window/long axis -> model.
+
+    The batch axis is identified by size; the ``model`` axis goes to the
+    largest remaining dim that divides (the KV window / state heads),
+    giving split-K decode attention and head-parallel state updates.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d_ax = "data"
+
+    def one(leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        used_batch = False
+        for i, s in enumerate(shape):
+            if not used_batch and s == batch_size and (
+                batch_size % sizes[d_ax] == 0 and batch_size >= sizes[d_ax]
+            ):
+                spec[i] = d_ax
+                used_batch = True
+                break
+        # model axis on the largest remaining divisible dim
+        cand, best = None, 0
+        for i, s in enumerate(shape):
+            if spec[i] is None and s % sizes["model"] == 0 \
+                    and s >= sizes["model"] and s > best:
+                cand, best = i, s
+        if cand is not None:
+            spec[cand] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

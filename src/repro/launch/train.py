@@ -1,0 +1,111 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-135m``.
+
+Wires the full production path on whatever devices exist: config registry
+-> model -> sharded train step (pjit) -> deterministic data stream ->
+AdamW -> atomic checkpointing -> resilient restart loop.  On a pod you'd
+run the same file under multi-host jax.distributed; on CPU it trains small
+models end-to-end (see examples/train_lm.py for the 100M-class example).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ShapeSpec, reduce_for_smoke
+from repro.launch import sharding as sh
+from repro.models import get_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train import data as data_lib
+from repro.train import fault_tolerance as ft
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def build_trainer(arch: str, *, seq_len: int, global_batch: int,
+                  steps: int, lr: float, microbatches: int, remat: str,
+                  smoke: bool, mesh=None, compress_grads: bool = False):
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    model = get_model(cfg)
+    shape = ShapeSpec("cli_train", seq_len, global_batch, "train")
+    tcfg = ts.TrainConfig(
+        microbatches=microbatches, remat=remat,
+        opt=opt_lib.OptimizerConfig(
+            peak_lr=lr, warmup_steps=max(10, steps // 20),
+            total_steps=steps, compress_grads=compress_grads,
+        ),
+    )
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt_lib.init_opt_state(params, tcfg.opt)
+    step = ts.make_train_step(model, tcfg)
+    if mesh is not None:
+        model.axis_rules = {
+            "batch": ("pod", "data") if "pod" in mesh.axis_names
+            else ("data",),
+            "tp": "model",
+            "ep": "model",
+            "sizes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "mesh": mesh,
+        }
+        pshard = sh.param_shardings(params, mesh)
+        oshard = sh.opt_state_shardings(opt_state, params, mesh)
+        bshard = sh.batch_shardings(model.input_specs(shape), mesh)
+        step = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                       donate_argnums=(0, 1))
+        params = jax.device_put(params, pshard)
+        opt_state = jax.device_put(opt_state, oshard)
+    else:
+        step = jax.jit(step, donate_argnums=(0, 1))
+    stream = data_lib.SyntheticStream(model, shape)
+    return model, params, opt_state, step, stream
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    model, params, opt_state, step, stream = build_trainer(
+        args.arch, seq_len=args.seq_len, global_batch=args.global_batch,
+        steps=args.steps, lr=args.lr, microbatches=args.microbatches,
+        remat=args.remat, smoke=not args.full_size,
+    )
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={model.cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.global_batch}x{args.seq_len}")
+
+    def step_fn(state, i):
+        p, o = state
+        p, o, metrics = step(p, o, stream.batch(i))
+        return (p, o), metrics
+
+    ckpt = ckpt_lib.Checkpointer(args.ckpt_dir)
+    loop = ft.ResilientLoop(step_fn, ckpt, save_every=args.save_every)
+    (_, _), report = loop.run(
+        (params, opt_state), args.steps, log_every=args.log_every
+    )
+    print(f"done: final_step={report.final_step} "
+          f"restarts={report.restarts} "
+          f"loss: {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

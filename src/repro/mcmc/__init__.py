@@ -1,0 +1,10 @@
+"""MCMC substrate: the paper's evaluation workload.
+
+``targets``   — differentiable log-densities (correlated Gaussian, Bayesian
+                logistic regression — the paper's two test problems).
+``nuts``      — the recursive No-U-Turn Sampler expressed in the autobatch
+                IR (Fig. 2), exactly the shape of program the paper batches.
+``iterative`` — a hand-rewritten, stack-free iterative NUTS in pure JAX
+                (the Phan/Pradhan-style baseline the paper cites).
+"""
+from . import targets, nuts, iterative  # noqa: F401

@@ -1,0 +1,262 @@
+"""Hand-rewritten *iterative* NUTS in pure JAX (the expert-effort baseline).
+
+The paper's related work (Phan & Pradhan 2019; Lao & Dillon 2019) notes that
+NUTS has been manually rewritten in non-recursive form specifically so that
+accelerators can run it: "One would expect such a manual effort to obtain
+better performance, but its labor-intensiveness necessarily limits its
+scope."  This module IS that manual effort, for direct comparison against
+the mechanical autobatching of :mod:`repro.mcmc.nuts`:
+
+* recursion is replaced by the checkpoint-stack trick: a depth-``j`` subtree
+  is built as ``2**j`` consecutive leaves, with U-turn checks of every
+  completed sub-subtree reconstructed from O(max_depth) stored checkpoints
+  (left-edge states), using the binary structure of the leaf index;
+* everything is ``lax.while_loop``/``lax.select`` so the whole multi-chain
+  sampler jits into a single XLA program and is batched with ``jax.vmap``.
+
+Semantics match slice-sampling NUTS (Hoffman & Gelman Alg. 3) with the
+paper's ``steps_per_leaf`` leapfrog steps per leaf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .nuts import DELTA_MAX, NutsSettings
+from .targets import Target
+
+
+class _SubtreeState(NamedTuple):
+    i: jax.Array  # leaf index within the subtree
+    theta: jax.Array
+    r: jax.Array
+    ckpt_theta: jax.Array  # [max_depth, dim] left-edge checkpoints
+    ckpt_r: jax.Array
+    prop: jax.Array  # reservoir-sampled proposal
+    cnt: jax.Array  # slice-passing leaves seen (reservoir denominator)
+    n: jax.Array  # slice count
+    s: jax.Array  # 1 while no divergence / no sub-U-turn
+    grads: jax.Array  # gradient evaluations (for throughput reporting)
+    key: jax.Array
+
+
+class _TrajState(NamedTuple):
+    tm: jax.Array
+    rm: jax.Array
+    tp: jax.Array
+    rp: jax.Array
+    theta_out: jax.Array
+    n: jax.Array
+    s: jax.Array
+    j: jax.Array
+    grads: jax.Array
+    key: jax.Array
+
+
+def _trailing_ones(i: jax.Array) -> jax.Array:
+    # popcount(i ^ (i+1)) == trailing_ones(i) + 1
+    return lax.population_count(i ^ (i + 1)) - 1
+
+
+def make_chain_fn(target: Target, settings: NutsSettings):
+    """Returns ``chain(theta0, eps, key) -> (theta, sum, sum_sq, grads)``,
+    a single-chain jittable function; ``jax.vmap`` it for batching."""
+    logp = target.logp
+    grad = jax.grad(logp)
+    dim = target.dim
+    max_depth = settings.max_tree_depth
+    spl = settings.steps_per_leaf
+
+    def leapfrog(theta, r, step):
+        def body(_, carry):
+            theta, r, g = carry
+            r_half = r + 0.5 * step * g
+            theta = theta + step * r_half
+            g = grad(theta)
+            r = r_half + 0.5 * step * g
+            return theta, r, g
+
+        theta, r, _ = lax.fori_loop(0, spl, body, (theta, r, grad(theta)))
+        return theta, r
+
+    def joint(theta, r):
+        return logp(theta) - 0.5 * jnp.sum(r * r)
+
+    def uturn_ok(tm, rm, tp, rp):
+        d = tp - tm
+        return jnp.logical_and(jnp.dot(d, rm) >= 0.0, jnp.dot(d, rp) >= 0.0)
+
+    # ------------------------------------------------------------------
+    # Iterative depth-j subtree via the checkpoint stack
+    # ------------------------------------------------------------------
+
+    def build_subtree(theta, r, log_u, v, depth, eps, key):
+        num_leaves = jnp.left_shift(jnp.int32(1), depth)
+
+        def cond(st: _SubtreeState):
+            return jnp.logical_and(st.i < num_leaves, st.s == 1)
+
+        def body(st: _SubtreeState):
+            theta, r = leapfrog(st.theta, st.r, v * eps)
+            jnt = joint(theta, r)
+            passes = log_u <= jnt
+            not_div = jnt > log_u - DELTA_MAX
+            # Reservoir-sample uniformly among slice-passing leaves.
+            cnt = st.cnt + passes.astype(jnp.int32)
+            key, k_res = jax.random.split(st.key)
+            take = jnp.logical_and(
+                passes, jax.random.uniform(k_res) * cnt < 1.0
+            )
+            prop = jnp.where(take, theta, st.prop)
+            # Checkpoint-stack U-turn checks (binary leaf-index structure).
+            i = st.i
+            even = (i % 2) == 0
+            idx_max = lax.population_count(i >> 1)
+            idx_min = idx_max - _trailing_ones(i) + 1
+            row = jnp.where(even, idx_max, max_depth)  # dropped when odd
+            ckpt_theta = st.ckpt_theta.at[row].set(theta, mode="drop")
+            ckpt_r = st.ckpt_r.at[row].set(r, mode="drop")
+            ks = jnp.arange(max_depth)
+            in_range = jnp.logical_and(ks >= idx_min, ks <= idx_max)
+            # d points from the minus-most to the plus-most edge.
+            d = v * (theta[None, :] - st.ckpt_theta)
+            turn_k = jnp.logical_or(
+                jnp.einsum("kd,kd->k", d, st.ckpt_r) < 0.0,
+                d @ r < 0.0,
+            )
+            turned = jnp.logical_and(
+                jnp.logical_not(even), jnp.any(in_range & turn_k)
+            )
+            s = st.s * not_div.astype(jnp.int32) * (1 - turned.astype(jnp.int32))
+            return _SubtreeState(
+                i=i + 1,
+                theta=theta,
+                r=r,
+                ckpt_theta=ckpt_theta,
+                ckpt_r=ckpt_r,
+                prop=prop,
+                cnt=cnt,
+                n=st.n + passes.astype(jnp.int32),
+                s=s,
+                grads=st.grads + spl + 1,
+                key=key,
+            )
+
+        init = _SubtreeState(
+            i=jnp.int32(0),
+            theta=theta,
+            r=r,
+            ckpt_theta=jnp.zeros((max_depth, dim), jnp.float32),
+            ckpt_r=jnp.zeros((max_depth, dim), jnp.float32),
+            prop=theta,
+            cnt=jnp.int32(0),
+            n=jnp.int32(0),
+            s=jnp.int32(1),
+            grads=jnp.int32(0),
+            key=key,
+        )
+        return lax.while_loop(cond, body, init)
+
+    # ------------------------------------------------------------------
+    # One trajectory (the doubling loop)
+    # ------------------------------------------------------------------
+
+    def nuts_step(theta, eps, key):
+        k_mom, k_slice, key = jax.random.split(key, 3)
+        r0 = jax.random.normal(k_mom, (dim,), jnp.float32)
+        joint0 = joint(theta, r0)
+        log_u = joint0 + jnp.log1p(-jax.random.uniform(k_slice))
+
+        def cond(st: _TrajState):
+            return jnp.logical_and(st.s == 1, st.j < max_depth)
+
+        def body(st: _TrajState):
+            k_dir, k_tree, k_acc, key = jax.random.split(st.key, 4)
+            v = jnp.where(jax.random.bernoulli(k_dir), 1.0, -1.0).astype(
+                jnp.float32
+            )
+            neg = v < 0.0
+            edge_t = jnp.where(neg, st.tm, st.tp)
+            edge_r = jnp.where(neg, st.rm, st.rp)
+            sub = build_subtree(edge_t, edge_r, log_u, v, st.j, eps, k_tree)
+            tm = jnp.where(neg, sub.theta, st.tm)
+            rm = jnp.where(neg, sub.r, st.rm)
+            tp = jnp.where(neg, st.tp, sub.theta)
+            rp = jnp.where(neg, st.rp, sub.r)
+            acc = jnp.logical_and(
+                sub.s == 1, jax.random.uniform(k_acc) * st.n < sub.n
+            )
+            theta_out = jnp.where(acc, sub.prop, st.theta_out)
+            s = sub.s * uturn_ok(tm, rm, tp, rp).astype(jnp.int32)
+            return _TrajState(
+                tm=tm, rm=rm, tp=tp, rp=rp,
+                theta_out=theta_out,
+                n=st.n + sub.n,
+                s=s,
+                j=st.j + 1,
+                grads=st.grads + sub.grads,
+                key=key,
+            )
+
+        init = _TrajState(
+            tm=theta, rm=r0, tp=theta, rp=r0,
+            theta_out=theta,
+            n=jnp.int32(1),
+            s=jnp.int32(1),
+            j=jnp.int32(0),
+            grads=jnp.int32(0),
+            key=key,
+        )
+        final = lax.while_loop(cond, body, init)
+        return final.theta_out, final.key, final.grads
+
+    # ------------------------------------------------------------------
+    # The chain
+    # ------------------------------------------------------------------
+
+    def chain(theta0, eps, key):
+        def body(_, carry):
+            theta, key, s1, s2, grads = carry
+            theta, key, g = nuts_step(theta, eps, key)
+            return (theta, key, s1 + theta, s2 + theta * theta, grads + g)
+
+        zero = jnp.zeros((dim,), jnp.float32)
+        theta, _, s1, s2, grads = lax.fori_loop(
+            0, settings.num_steps, body, (theta0, key, zero, zero, jnp.int32(0))
+        )
+        return theta, s1, s2, grads
+
+    return chain
+
+
+def make_batched(target: Target, settings: NutsSettings):
+    """Jitted, vmapped multi-chain iterative NUTS runner (build once)."""
+    chain = make_chain_fn(target, settings)
+    run = jax.jit(jax.vmap(chain))
+
+    def batched(theta0, eps, keys):
+        theta, s1, s2, grads = run(theta0, eps, keys)
+        return {
+            "theta": theta,
+            "sum_theta": s1,
+            "sum_sq": s2,
+            "grads": grads,
+        }
+
+    return batched
+
+
+def run_batched(
+    target: Target,
+    settings: NutsSettings,
+    theta0: jax.Array,  # [Z, dim]
+    eps: jax.Array,  # [Z]
+    keys: jax.Array,  # [Z, 2] uint32
+):
+    """One-shot convenience wrapper (re-traces per call; benchmarks should
+    use :func:`make_batched`)."""
+    return make_batched(target, settings)(theta0, eps, keys)

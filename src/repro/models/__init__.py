@@ -1,0 +1,2 @@
+"""Model definitions for all assigned architecture families."""
+from .transformer import Model, get_model  # noqa: F401

@@ -1,0 +1,435 @@
+"""Foundational layers: norms, RoPE / M-RoPE, GQA attention, FFNs.
+
+Conventions
+-----------
+* Params are plain nested dicts of ``jnp`` arrays (pytrees), stored in
+  ``cfg.param_dtype`` and cast to ``cfg.compute_dtype`` at use sites.
+* All sequence tensors are ``[batch, seq, ...]``; attention heads are kept
+  as a separate axis ``[B, S, H, Dh]`` (never merged until the out-proj).
+* Softmax / norm statistics always run in float32.
+* KV caches are fixed-shape ring buffers: ``{"k": [B, W, Hkv, Dh], "v": ...}``
+  where ``W`` is the cache window (full ``max_len`` or a sliding window).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Params = dict
+NEG_INF = -1e30
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), pdtype(cfg))}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def norm(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    else:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(
+    positions: jax.Array, head_dim: int, theta: float,
+    mrope_sections: tuple[int, ...] = (),
+) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables.
+
+    ``positions``: ``[B, S]`` (standard) or ``[B, 3, S]`` (M-RoPE: t/h/w
+    position per token).  Returns ``cos, sin`` of shape ``[B, S, Dh/2]``.
+    """
+    half = head_dim // 2
+    inv = (theta ** (-np.arange(0, half) * 2.0 / head_dim)).astype(np.float32)
+    inv = jnp.asarray(inv)
+    if mrope_sections:
+        assert positions.ndim == 3, "M-RoPE needs [B, 3, S] positions"
+        ang_full = positions[..., None].astype(jnp.float32) * inv  # [B,3,S,h]
+        parts = []
+        start = 0
+        for axis, sec in enumerate(mrope_sections):
+            parts.append(ang_full[:, axis, :, start : start + sec])
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)  # [B,S,half]
+    else:
+        angles = positions[..., None].astype(jnp.float32) * inv  # [B,S,half]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate-half RoPE. ``x``: [B, S, H, Dh]; cos/sin: [B, S, Dh/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ArchConfig, d: Optional[int] = None
+                   ) -> Params:
+    d = d or cfg.d_model
+    dh = cfg.resolved_head_dim
+    h, hk = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = 1.0 / np.sqrt(d)
+    scale_out = 1.0 / np.sqrt(h * dh)
+    dt = pdtype(cfg)
+    p: Params = {
+        "wq": jax.random.normal(k1, (d, h * dh), dt) * scale_in,
+        "wk": jax.random.normal(k2, (d, hk * dh), dt) * scale_in,
+        "wv": jax.random.normal(k3, (d, hk * dh), dt) * scale_in,
+        "wo": jax.random.normal(k4, (h * dh, d), dt) * scale_out,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((hk * dh,), dt)
+        p["bv"] = jnp.zeros((hk * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _project_qkv(params: Params, x: jax.Array, cfg: ArchConfig):
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    h, hk = cfg.num_heads, cfg.num_kv_heads
+    ct = x.dtype
+    q = x @ params["wq"].astype(ct)
+    k = x @ params["wk"].astype(ct)
+    v = x @ params["wv"].astype(ct)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(ct)
+        k = k + params["bk"].astype(ct)
+        v = v + params["bv"].astype(ct)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hk, dh)
+    v = v.reshape(b, s, hk, dh)
+    # Pin TP to the HEAD axis (when divisible).  Without this, SPMD may
+    # shard Dh (it divides the mesh even when H does not) — and a
+    # Dh-sharded contraction turns every score block into an all-reduce
+    # (measured: 859 GB/step of ARs on qwen3-14b train; §Perf log).
+    from . import shard_ctx
+
+    q = shard_ctx.constrain_strict(q, ("batch", None, "tp", None))
+    k = shard_ctx.constrain_strict(k, ("batch", None, "tp", None))
+    v = shard_ctx.constrain_strict(v, ("batch", None, "tp", None))
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm_simple(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: [B,S,H,Dh], k: [B,T,Hkv,Dh] -> scores [B,Hkv,G,S,T] (f32)."""
+    b, s, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, dh)
+    return jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) / np.sqrt(dh)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: [B,Hkv,G,S,T] (f32), v: [B,T,Hkv,Dh] -> [B,S,H*Dh]."""
+    b, hk, g, s, t = probs.shape
+    dh = v.shape[-1]
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hk * g * dh)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    *,
+    seg_mask: Optional[jax.Array] = None,
+    use_flash: bool = False,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill).
+
+    ``positions``: [B, S] or [B, 3, S] (M-RoPE).  Causality comes from
+    ``cfg.causal``; ``seg_mask`` ([B, S] validity) masks padding.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    cos, sin = rope_angles(
+        positions, cfg.resolved_head_dim, cfg.rope_theta, cfg.mrope_sections
+    )
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if use_flash and cfg.causal and seg_mask is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(q, k, v, causal=True)
+        out = out.reshape(b, s, -1)
+    else:
+        out = _blocked_attention(
+            q, k, v, causal=cfg.causal, seg_mask=seg_mask,
+            q_chunk=cfg.attn_q_chunk,
+        )
+    return out @ params["wo"].astype(x.dtype)
+
+
+def _blocked_attention(q, k, v, *, causal, seg_mask, q_chunk: int):
+    """Row-blocked (lazy-softmax) attention: iterate static query chunks so
+    the materialized score block is [B, H, q_chunk, T] instead of the full
+    [B, H, S, T] — the XLA-side equivalent of flash attention's memory
+    behaviour (each query row still sees its whole softmax denominator, so
+    no online rescaling is needed).  The loop is a python loop: every
+    chunk appears explicitly in the HLO, keeping the dry-run's static
+    FLOP/byte accounting exact."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    qc = q_chunk
+    while qc > 1 and s % qc:
+        qc //= 2
+    n = s // qc
+
+    def one_chunk(i, qs):
+        with jax.named_scope("attn_core"):
+            scores = _gqa_scores(qs, k)  # [B,Hkv,G,qc,T]
+            if causal:
+                rows = i * qc + jnp.arange(qc)
+                cmask = rows[:, None] >= jnp.arange(t)[None, :]
+                scores = jnp.where(cmask[None, None, None], scores, NEG_INF)
+            if seg_mask is not None:
+                scores = jnp.where(
+                    seg_mask[:, None, None, None, :], scores, NEG_INF
+                )
+            probs = jax.nn.softmax(scores, axis=-1)
+            return _gqa_out(probs, v)  # [B,qc,H*Dh]
+
+    if n == 1:
+        return one_chunk(0, q)
+    # lax.scan over query chunks: structurally sequential, so only ONE
+    # [*, qc, T] score block is ever live (forward AND backward — each
+    # chunk is checkpointed, so its scores are recomputed inside its own
+    # backward).  The flash-attention memory profile, at the XLA level.
+    b = q.shape[0]
+    h, dh = q.shape[2], q.shape[3]
+    qs_all = q.reshape(b, n, qc, h, dh).swapaxes(0, 1)  # [n,B,qc,H,Dh]
+
+    def body(_, xs):
+        i, qs = xs
+        return None, jax.checkpoint(one_chunk)(i, qs)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qs_all))
+    return outs.swapaxes(0, 1).reshape(b, s, h * dh)
+
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, window: int, dtype
+) -> Params:
+    dh = cfg.resolved_head_dim
+    if cfg.kv_cache_dtype == "int8":
+        # per-(position, head) symmetric int8 with bf16 scales: halves the
+        # dominant decode byte stream (beyond-paper perf lever, §Perf)
+        return {
+            "k_q": jnp.zeros((batch, window, cfg.num_kv_heads, dh), jnp.int8),
+            "k_s": jnp.zeros((batch, window, cfg.num_kv_heads), jnp.bfloat16),
+            "v_q": jnp.zeros((batch, window, cfg.num_kv_heads, dh), jnp.int8),
+            "v_s": jnp.zeros((batch, window, cfg.num_kv_heads), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, window, cfg.num_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, window, cfg.num_kv_heads, dh), dtype),
+    }
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [..., Dh] -> (int8 values, bf16 scale over the last dim)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
+    scale = (amax / 127.0).astype(jnp.bfloat16)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale.astype(jnp.float32)[..., None]),
+        -127, 127,
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    # dequantize directly in the compute dtype: int8 -> bf16 converts are
+    # exact (|q| <= 127) and skipping the f32 intermediate saves a full
+    # cache-sized f32 round trip per layer (§Perf)
+    return q.astype(dtype) * scale.astype(dtype)[..., None]
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # [B, 1, d]
+    cfg: ArchConfig,
+    cache: Params,
+    position: jax.Array,  # [B] absolute position of the new token
+) -> tuple[jax.Array, Params]:
+    """One decode step against a (possibly sliding-window) ring cache."""
+    b = x.shape[0]
+    window = (cache["k_q"] if "k_q" in cache else cache["k"]).shape[1]
+    q, k_new, v_new = _project_qkv(params, x, cfg)  # S = 1
+    pos_b = position[:, None]  # [B,1]
+    if cfg.mrope_sections:
+        pos_rope = jnp.broadcast_to(pos_b[:, None], (b, 3, 1))
+    else:
+        pos_rope = pos_b
+    cos, sin = rope_angles(
+        pos_rope, cfg.resolved_head_dim, cfg.rope_theta, cfg.mrope_sections
+    )
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+    slot = (position % window)[:, None]  # ring-buffer slot
+    bidx = jnp.arange(b)[:, None]
+    quantized = "k_q" in cache
+    if quantized:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        new_cache = {
+            "k_q": cache["k_q"].at[bidx, slot].set(kq),
+            "k_s": cache["k_s"].at[bidx, slot].set(ks),
+            "v_q": cache["v_q"].at[bidx, slot].set(vq),
+            "v_s": cache["v_s"].at[bidx, slot].set(vs),
+        }
+        k_cache = _dequantize_kv(new_cache["k_q"], new_cache["k_s"], x.dtype)
+        v_cache = _dequantize_kv(new_cache["v_q"], new_cache["v_s"], x.dtype)
+    else:
+        k_cache = cache["k"].at[bidx, slot].set(k_new)
+        v_cache = cache["v"].at[bidx, slot].set(v_new)
+        new_cache = {"k": k_cache, "v": v_cache}
+    # Valid entries: absolute index of slot j is <= position and within
+    # the last `window` tokens.
+    slots = jnp.arange(window)[None, :]  # [1, W]
+    written = jnp.minimum(position[:, None] + 1, window)  # entries present
+    # For a ring buffer the valid set is simply "slot has been written",
+    # i.e. slot < written when position < window, else all.
+    valid = slots < written
+    with jax.named_scope("attn_core"):
+        scores = _gqa_scores(q, k_cache)  # [B,Hkv,G,1,W]
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v_cache)  # [B,1,H*Dh]
+    out = out @ params["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key: jax.Array, cfg: ArchConfig, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    return {
+        "wg": jax.random.normal(k1, (d, d_ff), dt) / np.sqrt(d),
+        "wu": jax.random.normal(k2, (d, d_ff), dt) / np.sqrt(d),
+        "wd": jax.random.normal(k3, (d_ff, d), dt) / np.sqrt(d_ff),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    ct = x.dtype
+    g = jax.nn.silu(x @ params["wg"].astype(ct))
+    u = x @ params["wu"].astype(ct)
+    return (g * u) @ params["wd"].astype(ct)
+
+
+def init_gelu_mlp(key: jax.Array, cfg: ArchConfig, d: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = pdtype(cfg)
+    return {
+        "w1": jax.random.normal(k1, (d, d_ff), dt) / np.sqrt(d),
+        "b1": jnp.zeros((d_ff,), dt),
+        "w2": jax.random.normal(k2, (d_ff, d), dt) / np.sqrt(d_ff),
+        "b2": jnp.zeros((d,), dt),
+    }
+
+
+def gelu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    ct = x.dtype
+    h = jax.nn.gelu(x @ params["w1"].astype(ct) + params["b1"].astype(ct))
+    return h @ params["w2"].astype(ct) + params["b2"].astype(ct)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = pdtype(cfg)
+    p = {
+        "embedding": jax.random.normal(
+            k1, (cfg.vocab_size, cfg.d_model), dt
+        ) * 0.02
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            k2, (cfg.d_model, cfg.vocab_size), dt
+        ) / np.sqrt(cfg.d_model)
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return params["embedding"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    return x @ w

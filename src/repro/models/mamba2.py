@@ -1,0 +1,197 @@
+"""Mamba2 (SSD) layer: chunked-parallel training scan + O(1) decode step.
+
+TPU adaptation (see DESIGN.md): the CUDA Mamba2 kernel's warp-level scan is
+replaced by the *chunked state-space-dual* form — intra-chunk work becomes
+dense ``[L, L]`` einsums (MXU-friendly), inter-chunk state is carried by a
+``lax.scan`` over ``S / chunk`` steps.  All statistics in float32.
+
+Recurrence (per head h, state ``[P, N]``):
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = h_t C_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .layers import Params, pdtype, rms_norm_simple
+
+
+def dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_in // p
+    n = cfg.ssm_state
+    return d_in, h, p, n
+
+
+def init_mamba2(key: jax.Array, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, h, p, n = dims(cfg)
+    conv_dim = d_in + 2 * n
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    # dt_bias init so that softplus(dt_bias) spans [1e-3, 1e-1] (standard).
+    u = jax.random.uniform(k3, (h,), jnp.float32)
+    dt_init = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inv_softplus
+    return {
+        "w_in": jax.random.normal(
+            k1, (d, 2 * d_in + 2 * n + h), dt
+        ) / np.sqrt(d),
+        "conv_w": jax.random.normal(
+            k2, (cfg.ssm_conv_width, conv_dim), dt
+        ) / np.sqrt(cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "dt_bias": dt_bias.astype(dt),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)).astype(dt),
+        "d_skip": jnp.ones((h,), dt),
+        "gate_norm": jnp.ones((d_in,), dt),
+        "w_out": jax.random.normal(k1, (d_in, d), dt) / np.sqrt(d_in),
+    }
+
+
+def _split_proj(params: Params, x: jax.Array, cfg: ArchConfig):
+    d_in, h, p, n = dims(cfg)
+    zxbcdt = x @ params["w_in"].astype(x.dtype)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, params: Params, cfg: ArchConfig
+                 ) -> jax.Array:
+    """Depthwise causal conv over time. xbc: [B, S, C]."""
+    w = params["conv_w"].astype(xbc.dtype)  # [W, C]
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1]] * w[i] for i in range(width)
+    )
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunked(
+    x: jax.Array,  # [B, S, H, P]
+    b_in: jax.Array,  # [B, S, N]
+    c_in: jax.Array,  # [B, S, N]
+    dt: jax.Array,  # [B, S, H]  (f32, post-softplus)
+    a: jax.Array,  # [H] (f32, negative)
+    chunk: int,
+    h0: jax.Array | None = None,  # [B, H, P, N] initial state
+):
+    """Chunked SSD scan. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+    xc = x.reshape(bsz, nc, chunk, h, p).swapaxes(0, 1)
+    bc = b_in.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    cc = c_in.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    dtc = dt.reshape(bsz, nc, chunk, h).swapaxes(0, 1)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h_prev, inp):
+        xk, bk, ck, dtk = inp  # [B,L,H,P], [B,L,N], [B,L,N], [B,L,H]
+        loga = dtk * a  # [B,L,H]  log decay per step
+        s_cum = jnp.cumsum(loga, axis=1)  # inclusive
+        # intra-chunk: G[b,h,l,j] = (C_l . B_j) exp(s_l - s_j) dt_j, j<=l
+        cb = jnp.einsum("bln,bjn->blj", ck, bk,
+                        preferred_element_type=jnp.float32)
+        decay = s_cum[:, :, None, :] - s_cum[:, None, :, :]  # [B,l,j,H]
+        gate = jnp.where(tri[None, :, :, None], jnp.exp(decay), 0.0)
+        g = cb[..., None] * gate * dtk[:, None, :, :]  # [B,l,j,H]
+        y_intra = jnp.einsum("bljh,bjhp->blhp", g, xk.astype(jnp.float32))
+        # inter-chunk: y_l += exp(s_l) * C_l . h_prev
+        y_inter = jnp.einsum(
+            "bln,bhpn->blhp", ck.astype(jnp.float32), h_prev
+        ) * jnp.exp(s_cum)[:, :, :, None]
+        # state update: h = exp(s_L) h_prev + sum_j exp(s_L - s_j) dt_j x_j B_j
+        tail = jnp.exp(s_cum[:, -1:, :] - s_cum)  # [B,L,H]
+        dx = (tail * dtk)[..., None] * xk.astype(jnp.float32)  # [B,L,H,P]
+        h_new = jnp.einsum("blhp,bln->bhpn", dx, bk.astype(jnp.float32))
+        h_new = h_new + jnp.exp(s_cum[:, -1])[:, :, None, None] * h_prev
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_fin, ys = jax.lax.scan(body, h0, (xc, bc, cc, dtc))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, h_fin
+
+
+def mamba2_forward(params: Params, x: jax.Array, cfg: ArchConfig
+                   ) -> jax.Array:
+    """Full-sequence forward. x: [B, S, d] -> [B, S, d]."""
+    d_in, h, p, n = dims(cfg)
+    bsz, s, _ = x.shape
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc = _causal_conv(xbc, params, cfg)
+    xs = xbc[..., :d_in].reshape(bsz, s, h, p)
+    b_in = xbc[..., d_in : d_in + n]
+    c_in = xbc[..., d_in + n :]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, _ = _ssd_chunked(xs, b_in, c_in, dt, a, cfg.ssm_chunk)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm_simple(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    d_in, h, p, n = dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    params: Params, x: jax.Array, cfg: ArchConfig, cache: Params
+) -> tuple[jax.Array, Params]:
+    """x: [B, 1, d] -> (y [B, 1, d], cache). O(1) in context length."""
+    d_in, h, p, n = dims(cfg)
+    bsz = x.shape[0]
+    z, xbc, dt_raw = _split_proj(params, x, cfg)  # [B,1,*]
+    # conv over the cached window + this step
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, W, C]
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(
+        x.dtype
+    )
+    xbc_t = jax.nn.silu(conv_out)  # [B, C]
+    new_conv = hist[:, 1:]
+    xs = xbc_t[..., :d_in].reshape(bsz, h, p)
+    b_in = xbc_t[..., d_in : d_in + n]
+    c_in = xbc_t[..., d_in + n :]
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # [B, H]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # [B, H]
+    upd = (dt[..., None] * xs.astype(jnp.float32))[..., None] * b_in.astype(
+        jnp.float32
+    )[:, None, None, :]
+    h_new = decay[:, :, None, None] * cache["ssm"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_in.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm_simple(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    y = y @ params["w_out"].astype(x.dtype)
+    return y, {"conv": new_conv, "ssm": h_new}

@@ -1,0 +1,215 @@
+"""Mixture-of-experts FFN: shared + routed top-k experts (fine-grained).
+
+Dispatch is sort-based with a static per-expert capacity — the TPU-native
+scheme (MaxText-style): tokens are argsorted by expert id, positioned with a
+segment cumsum, scattered into a ``[E, C, d]`` buffer, pushed through a
+batched expert GEMM, and gathered back with combine weights.  All shapes are
+static (XLA requirement); overflow beyond capacity is dropped (standard) and
+reported in aux metrics.
+
+Under expert parallelism the ``[E, ...]`` axis is sharded over the ``model``
+mesh axis; the scatter/gather lower to all-to-alls, visible in the dry-run
+collective schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from . import shard_ctx
+from .layers import Params, init_swiglu, pdtype, swiglu
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    kr, ke, ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    keg, keu, ked = jax.random.split(ke, 3)
+    p: Params = {
+        "router": jax.random.normal(kr, (d, e), dt) / np.sqrt(d),
+        "wg": jax.random.normal(keg, (e, d, ff), dt) / np.sqrt(d),
+        "wu": jax.random.normal(keu, (e, d, ff), dt) / np.sqrt(d),
+        "wd": jax.random.normal(ked, (e, ff, d), dt) / np.sqrt(ff),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_swiglu(
+            ks, cfg, d, cfg.moe_d_ff * cfg.num_shared_experts
+        )
+    return p
+
+
+def router_probs(params: Params, x: jax.Array, cfg: ArchConfig):
+    """x: [T, d] -> (weights [T, k], expert ids [T, k], aux metrics)."""
+    logits = (x.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)  # [T, k]
+    if cfg.moe_renorm_topk:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e.
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    assign = jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32)
+    fe = jnp.mean(assign, axis=0)  # fraction of tokens (top-1) per expert
+    aux_loss = e * jnp.sum(me * fe)
+    return top_p, top_e, {"moe_aux_loss": aux_loss}
+
+
+def moe_ffn(params: Params, x: jax.Array, cfg: ArchConfig
+            ) -> tuple[jax.Array, dict]:
+    """x: [B, S, d] -> (y, aux).
+
+    Two lowering strategies:
+
+    * **EP shard_map path** (under a mesh with a ``tp``/``ep`` axis and
+      ``E % shards == 0``): each model-shard selects, sorts and computes
+      ONLY its local experts' tokens from its (model-replicated,
+      batch-sharded) activations — dispatch is entirely local — and the
+      partial outputs combine with ONE ``psum`` over the model axis.
+      This is the correct distributed algorithm; letting XLA's SPMD
+      partitioner handle the scatter instead was measured to emit ~4 GB
+      all-reduces per layer (§Perf, refuted-hypothesis log).
+    * **single-device path**: global sort-and-scatter dispatch (tests,
+      CPU runs, meshless traces).
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.num_experts
+    xf = x.reshape(t, d)
+    top_p, top_e, aux = router_probs(params, xf, cfg)
+
+    rules = shard_ctx.current_rules()
+    n_shards = 0
+    if rules is not None and rules.get("mesh") is not None:
+        tp_axis = rules.get("ep") or rules.get("tp")
+        if tp_axis:
+            n_shards = rules["sizes"].get(tp_axis, 0)
+    if n_shards > 1 and e % n_shards == 0:
+        with jax.named_scope("moe_dispatch"):
+            y = _moe_ep_shardmap(
+                params, x, top_p.reshape(b, s, k), top_e.reshape(b, s, k),
+                cfg, rules, tp_axis,
+            )
+        aux = dict(aux, moe_dropped_frac=-1.0)  # not tracked on this path
+        if cfg.num_shared_experts:
+            y = y + swiglu(params["shared"], x)
+        return y, aux
+
+    capacity = int(np.ceil(t * k * cfg.capacity_factor / e))
+    capacity = max(capacity, 4)
+
+    with jax.named_scope("moe_dispatch"):
+        return _dispatch_compute_combine(params, x, xf, top_p, top_e, aux,
+                                         capacity, cfg)
+
+
+def _moe_ep_shardmap(params, x, top_p, top_e, cfg, rules, tp_axis):
+    """Expert-parallel MoE via shard_map: local dispatch, psum combine."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules["mesh"]
+    sizes = rules["sizes"]
+    daxes = tuple(a for a in rules.get("batch", ()) if a in sizes)
+    dp = 1
+    for a in daxes:
+        dp *= sizes[a]
+    n_shards = sizes[tp_axis]
+    e = cfg.num_experts
+    e_loc = e // n_shards
+    k = cfg.top_k
+    b, s, d = x.shape
+    t_loc = max(1, b // dp) * s
+    capacity = max(4, int(np.ceil(t_loc * k * cfg.capacity_factor / e)))
+    bspec = P(daxes if len(daxes) > 1 else (daxes[0] if daxes else None))
+
+    def per_shard(wg, wu, wd, x_loc, p_loc, e_idx_loc):
+        bl, sl, _ = x_loc.shape
+        tl = bl * sl
+        xt = x_loc.reshape(tl, d)
+        pp = p_loc.reshape(tl * k)
+        ee = e_idx_loc.reshape(tl * k)
+        my_first = jax.lax.axis_index(tp_axis) * e_loc
+        local_e = ee - my_first
+        mine = jnp.logical_and(local_e >= 0, local_e < e_loc)
+        bucket = jnp.where(mine, local_e, e_loc)  # e_loc = drop bucket
+        order = jnp.argsort(bucket)
+        sorted_b = bucket[order]
+        counts = jnp.bincount(bucket, length=e_loc + 1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(tl * k) - starts[sorted_b]
+        keep = jnp.logical_and(sorted_b < e_loc, pos < capacity)
+        dst_e = jnp.where(keep, sorted_b, e_loc)
+        dst_c = jnp.where(keep, pos, 0)
+        src_tok = (jnp.arange(tl * k) // k)[order]
+        buf = jnp.zeros((e_loc, capacity, d), x_loc.dtype)
+        buf = buf.at[dst_e, dst_c].set(xt[src_tok], mode="drop")
+        ct = x_loc.dtype
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(ct)))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(ct))
+        ob = jnp.einsum("ecf,efd->ecd", g * u, wd.astype(ct))
+        ya = ob[dst_e.clip(0, e_loc - 1), dst_c]
+        ya = jnp.where(keep[:, None], ya, 0.0)
+        ya = ya * pp[order][:, None].astype(ct)
+        y = jnp.zeros((tl, d), ct).at[src_tok].add(ya)
+        y = jax.lax.psum(y, tp_axis)  # combine partial expert outputs
+        return y.reshape(bl, sl, d)
+
+    fn = jax.shard_map(
+        per_shard,
+        mesh=mesh,
+        in_specs=(
+            P(tp_axis), P(tp_axis), P(tp_axis),  # expert weights
+            bspec, bspec, bspec,  # activations / routing (batch-sharded)
+        ),
+        out_specs=bspec,
+        check_vma=False,
+    )
+    return fn(params["wg"], params["wu"], params["wd"], x, top_p, top_e)
+
+
+def _dispatch_compute_combine(params, x, xf, top_p, top_e, aux,
+                              capacity, cfg):
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.num_experts
+    # ---- sort assignments by expert id ----
+    flat_e = top_e.reshape(t * k)  # assignment -> expert
+    flat_w = top_p.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t), k)  # assignment -> token
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = flat_e[order]
+    # position of each assignment within its expert's segment
+    counts = jnp.bincount(flat_e, length=e)  # [E]
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < capacity
+    # ---- scatter tokens into [E, C, d] ----
+    dst_e = jnp.where(keep, sorted_e, e)  # OOB row dropped
+    dst_c = jnp.where(keep, pos_in_e, 0)
+    src_tok = flat_tok[order]
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[dst_e, dst_c].set(xf[src_tok], mode="drop")
+    # expert-parallel layout: the capacity buffer lives on the expert axis
+    buf = shard_ctx.constrain(buf, ("ep", None, None))
+    # ---- batched expert GEMMs (SwiGLU) ----
+    ct = x.dtype
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(ct)))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["wu"].astype(ct))
+    out_buf = jnp.einsum("ecf,efd->ecd", g * u, params["wd"].astype(ct))
+    out_buf = shard_ctx.constrain(out_buf, ("ep", None, None))
+    # ---- gather back + combine ----
+    y_assign = out_buf[dst_e.clip(0, e - 1), dst_c]  # [T*k, d]
+    y_assign = jnp.where(keep[:, None], y_assign, 0.0)
+    y_assign = y_assign * flat_w[order][:, None].astype(ct)
+    y = jnp.zeros((t, d), ct).at[src_tok].add(y_assign)
+
+    dropped = jnp.sum(1.0 - keep.astype(jnp.float32)) / (t * k)
+    aux = dict(aux, moe_dropped_frac=dropped)
+    if cfg.num_shared_experts:
+        y = y + swiglu(params["shared"], xf)
+    return y.reshape(b, s, d), aux

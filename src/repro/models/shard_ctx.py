@@ -1,0 +1,92 @@
+"""Activation-sharding context: lets leaf modules (MoE dispatch, SSM
+cores) place ``with_sharding_constraint``s without threading the launcher
+configuration through every call signature.
+
+The launcher-facing entry is ``Model.axis_rules``; ``Model.forward`` /
+``decode_step`` install it here for the duration of the trace.  Rules:
+
+    {"batch": ("pod","data") | ("data",),
+     "tp": "model", "ep": "model",
+     "sizes": {axis: size}}
+
+``constrain(x, ("batch", None, "tp"))`` maps logical names to mesh axes,
+drops entries whose dimension is not divisible, and no-ops when no rules
+are installed (unit tests, single-device runs).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_axis_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[dict]):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> Optional[dict]:
+    return _RULES.get()
+
+
+def constrain_strict(x: jax.Array, logical: tuple) -> jax.Array:
+    """All-or-nothing constraint: apply only if EVERY named axis divides
+    its dimension; otherwise leave the array entirely unconstrained (a
+    partial constraint would pin the remaining dims to *replicated*,
+    which can be far worse than whatever SPMD picks)."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sizes = rules["sizes"]
+    for dim, name in enumerate(logical):
+        if name is None:
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            return x
+        if isinstance(axes, str):
+            axes = (axes,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if x.shape[dim] % total != 0 or x.shape[dim] < total:
+            return x
+    return constrain(x, logical)
+
+
+def constrain(x: jax.Array, logical: tuple) -> jax.Array:
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sizes = rules["sizes"]
+    spec = []
+    for dim, name in enumerate(logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if x.shape[dim] % total == 0 and x.shape[dim] >= total:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,346 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential) — arXiv:2405.04517.
+
+TPU adaptation: the mLSTM recurrence admits the same chunked-parallel
+treatment as SSD — intra-chunk terms become masked ``[L, L]`` einsums on the
+MXU, inter-chunk state ``(C, n, m)`` is carried by ``lax.scan``; the
+exponential gating is max-stabilized in log space (float32).  The sLSTM is
+inherently sequential (its recurrence mixes hidden state into the gates), so
+it runs as a ``lax.scan`` over time with block-diagonal per-head recurrent
+weights — this is the honest cost of sLSTM on any accelerator.
+
+Cell equations (stabilized) follow the paper's Appendix A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .layers import Params, pdtype, rms_norm_simple
+
+
+def mlstm_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.num_heads
+    p = d_in // h
+    return d_in, h, p
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key: jax.Array, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, h, p = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    return {
+        "w_up": jax.random.normal(ks[0], (d, 2 * d_in), dt) / np.sqrt(d),
+        "conv_w": jax.random.normal(
+            ks[1], (cfg.ssm_conv_width, d_in), dt
+        ) / np.sqrt(cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "wq": jax.random.normal(ks[2], (d_in, d_in), dt) / np.sqrt(d_in),
+        "wk": jax.random.normal(ks[3], (d_in, d_in), dt) / np.sqrt(d_in),
+        "wv": jax.random.normal(ks[4], (d_in, d_in), dt) / np.sqrt(d_in),
+        "w_if": jax.random.normal(ks[5], (d_in, 2 * h), dt) / np.sqrt(d_in),
+        # bias init: forget gates start open (+3), input gates mild (-1)
+        "b_if": jnp.concatenate(
+            [jnp.full((h,), -1.0), jnp.full((h,), 3.0)]
+        ).astype(dt),
+        "head_norm": jnp.ones((d_in,), dt),
+        "w_down": jax.random.normal(ks[0], (d_in, d), dt) / np.sqrt(d_in),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _mlstm_qkv_gates(params: Params, x: jax.Array, cfg: ArchConfig):
+    d_in, h, p = mlstm_dims(cfg)
+    bsz, s, _ = x.shape
+    up = x @ params["w_up"].astype(x.dtype)
+    x_part, z_part = up[..., :d_in], up[..., d_in:]
+    x_conv = _causal_conv(
+        x_part, params["conv_w"].astype(x.dtype),
+        params["conv_b"].astype(x.dtype),
+    )
+    q = (x_conv @ params["wq"].astype(x.dtype)).reshape(bsz, s, h, p)
+    k = (x_conv @ params["wk"].astype(x.dtype)).reshape(bsz, s, h, p)
+    k = k / np.sqrt(p)
+    v = (x_part @ params["wv"].astype(x.dtype)).reshape(bsz, s, h, p)
+    if_pre = (
+        x_conv @ params["w_if"].astype(x.dtype)
+        + params["b_if"].astype(x.dtype)
+    ).astype(jnp.float32)
+    log_i = if_pre[..., :h]  # [B,S,H]
+    log_f = -jax.nn.softplus(-if_pre[..., h:])  # log sigmoid
+    return q, k, v, z_part, log_i, log_f, x_conv
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int, state=None):
+    """Stabilized chunk-parallel mLSTM.
+
+    q,k,v: [B,S,H,P]; log_i/log_f: [B,S,H] (f32).
+    Returns (h_out [B,S,H,P], state=(C [B,H,P,P], n [B,H,P], m [B,H])).
+    """
+    bsz, s, h, p = q.shape
+    nc = s // chunk
+    assert nc * chunk == s
+    swap = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = swap(q), swap(k), swap(v)
+    lic, lfc = swap(log_i), swap(log_f)
+    if state is None:
+        state = (
+            jnp.zeros((bsz, h, p, p), jnp.float32),
+            jnp.zeros((bsz, h, p), jnp.float32),
+            jnp.full((bsz, h), -1e30, jnp.float32),
+        )
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qk_, kk, vk, li, lf = inp
+        fcum = jnp.cumsum(lf, axis=1)  # [B,L,H] inclusive
+        # b[l,j] = Fcum_l - Fcum_j + log i_j   (j <= l)
+        bmat = fcum[:, :, None, :] - fcum[:, None, :, :] + li[:, None, :, :]
+        bmat = jnp.where(tri[None, :, :, None], bmat, -jnp.inf)
+        m_intra = jnp.max(bmat, axis=2)  # [B,L,H]
+        m_inter = fcum + m_prev[:, None, :]
+        m = jnp.maximum(m_intra, m_inter)  # [B,L,H]
+        m = jnp.maximum(m, -1e30)  # keep finite
+        # intra-chunk attention-like term
+        qkt = jnp.einsum("blhp,bjhp->blhj", qk_.astype(jnp.float32),
+                         kk.astype(jnp.float32))
+        # bmat is already -inf outside the causal triangle -> exp gives 0
+        w_ = qkt * jnp.exp(bmat.swapaxes(2, 3) - m[:, :, :, None])  # [B,l,h,j]
+        num_intra = jnp.einsum("blhj,bjhp->blhp", w_, vk.astype(jnp.float32))
+        den_intra = jnp.sum(w_, axis=-1)  # [B,l,h]
+        # inter-chunk contribution
+        scale_inter = jnp.exp(m_inter - m)  # [B,L,H]
+        q32 = qk_.astype(jnp.float32)
+        num_inter = jnp.einsum("blhp,bhpq->blhq", q32, c_prev) * scale_inter[
+            ..., None
+        ]
+        den_inter = jnp.einsum("blhp,bhp->blh", q32, n_prev) * scale_inter
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        # ---- state update at chunk end ----
+        f_tail = fcum[:, -1:, :] - fcum + li  # [B,L,H] log weight per j
+        m_new = jnp.maximum(
+            jnp.max(f_tail, axis=1), fcum[:, -1] + m_prev
+        )  # [B,H]
+        w_state = jnp.exp(f_tail - m_new[:, None, :])  # [B,L,H]
+        kv = jnp.einsum(
+            "blhp,blhq->bhpq",
+            (kc_ := kk.astype(jnp.float32)) * w_state[..., None],
+            vk.astype(jnp.float32),
+        )
+        c_new = (
+            jnp.exp(fcum[:, -1] + m_prev - m_new)[:, :, None, None] * c_prev
+            + kv
+        )
+        ksum = jnp.einsum("blhp->bhp", kc_ * w_state[..., None])
+        n_new = jnp.exp(fcum[:, -1] + m_prev - m_new)[:, :, None] * n_prev + ksum
+        return (c_new, n_new, m_new), h_out.astype(q.dtype)
+
+    state_f, hs = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    h_out = hs.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return h_out, state_f
+
+
+def mlstm_forward(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    d_in, h, p = mlstm_dims(cfg)
+    bsz, s, _ = x.shape
+    q, k, v, z_part, log_i, log_f, _ = _mlstm_qkv_gates(params, x, cfg)
+    h_out, _ = _mlstm_chunked(q, k, v, log_i, log_f, cfg.ssm_chunk)
+    y = h_out.reshape(bsz, s, d_in)
+    y = rms_norm_simple(y, params["head_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z_part)
+    return y @ params["w_down"].astype(x.dtype)
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    d_in, h, p = mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in), dtype),
+        "c": jnp.zeros((batch, h, p, p), jnp.float32),
+        "n": jnp.zeros((batch, h, p), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(
+    params: Params, x: jax.Array, cfg: ArchConfig, cache: Params
+) -> tuple[jax.Array, Params]:
+    """x: [B, 1, d]. O(1) per token."""
+    d_in, h, p = mlstm_dims(cfg)
+    bsz = x.shape[0]
+    up = x @ params["w_up"].astype(x.dtype)
+    x_part, z_part = up[..., :d_in], up[..., d_in:]
+    hist = jnp.concatenate([cache["conv"], x_part], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    x_conv = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(x.dtype)
+    )
+    q = (x_conv @ params["wq"].astype(x.dtype)).reshape(bsz, h, p)
+    k = (x_conv @ params["wk"].astype(x.dtype)).reshape(bsz, h, p) / np.sqrt(p)
+    v = (x_part[:, 0] @ params["wv"].astype(x.dtype)).reshape(bsz, h, p)
+    if_pre = (
+        x_conv @ params["w_if"].astype(x.dtype)
+        + params["b_if"].astype(x.dtype)
+    ).astype(jnp.float32)
+    log_i, log_f = if_pre[..., :h], -jax.nn.softplus(-if_pre[..., h:])
+    m_new = jnp.maximum(log_f + cache["m"], log_i)  # [B,H]
+    f_s = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    i_s = jnp.exp(log_i - m_new)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = f_s[..., None] * cache["c"] + i_s[..., None] * (
+        k32[..., :, None] * v32[..., None, :]
+    )
+    n_new = f_s * cache["n"] + i_s * k32
+    num = jnp.einsum("bhp,bhpq->bhq", q32, c_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhp,bhp->bh", q32, n_new)), jnp.exp(-m_new)
+    )
+    h_out = (num / den[..., None]).astype(x.dtype).reshape(bsz, 1, d_in)
+    y = rms_norm_simple(h_out, params["head_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z_part)
+    y = y @ params["w_down"].astype(x.dtype)
+    return y, {
+        "conv": hist[:, 1:], "c": c_new, "n": n_new, "m": m_new,
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key: jax.Array, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    hidden = int(round(4.0 / 3.0 * d))
+    ks = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    return {
+        "conv_w": jax.random.normal(
+            ks[0], (cfg.ssm_conv_width, d), dt
+        ) / np.sqrt(cfg.ssm_conv_width),
+        "conv_b": jnp.zeros((d,), dt),
+        # gate input projections: z, i, f, o stacked
+        "w_gates": jax.random.normal(ks[1], (d, 4 * d), dt) / np.sqrt(d),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(dt),
+        # block-diagonal recurrent weights per head: [4, H, Dh, Dh]
+        "r_gates": jax.random.normal(ks[2], (4, h, dh, dh), dt) / np.sqrt(dh),
+        "head_norm": jnp.ones((d,), dt),
+        "w_up": jax.random.normal(ks[3], (d, 2 * hidden), dt) / np.sqrt(d),
+        "w_down": jax.random.normal(ks[4], (hidden, d), dt) / np.sqrt(hidden),
+    }
+
+
+def _slstm_cell(params: Params, cfg: ArchConfig, x_t, x_conv_t, state):
+    """One sLSTM step. x_t, x_conv_t: [B, d]."""
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    c, n, hid, m = state  # each [B, d] except m [B, d]
+    ct = x_t.dtype
+    wg = params["w_gates"].astype(ct)
+    bg = params["b_gates"].astype(ct)
+    # recurrent block-diagonal contribution from previous hidden state
+    hid_h = hid.reshape(-1, h, dh)
+    rec = jnp.einsum(
+        "bhp,ghpq->gbhq", hid_h.astype(ct), params["r_gates"].astype(ct)
+    ).reshape(4, -1, d)
+    # z/o read the raw input; i/f read the conv-smoothed input (per paper)
+    z_pre = x_t @ wg[:, :d] + bg[:d] + rec[0]
+    i_pre = x_conv_t @ wg[:, d : 2 * d] + bg[d : 2 * d] + rec[1]
+    f_pre = x_conv_t @ wg[:, 2 * d : 3 * d] + bg[2 * d : 3 * d] + rec[2]
+    o_pre = x_t @ wg[:, 3 * d :] + bg[3 * d :] + rec[3]
+    z = jnp.tanh(z_pre.astype(jnp.float32))
+    log_i = i_pre.astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))
+    o = jax.nn.sigmoid(o_pre.astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_tilde = c_new / jnp.maximum(n_new, 1.0)
+    hid_new = o * h_tilde
+    return (c_new, n_new, hid_new.astype(jnp.float32), m_new), hid_new
+
+
+def slstm_forward(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    bsz, s, d = x.shape
+    x_conv = _causal_conv(
+        x, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)
+    )
+    state = init_slstm_state(cfg, bsz)
+
+    def body(st, inp):
+        x_t, xc_t = inp
+        st, hid = _slstm_cell(params, cfg, x_t, xc_t, st)
+        return st, hid
+
+    _, hs = jax.lax.scan(
+        body, state, (x.swapaxes(0, 1), x_conv.swapaxes(0, 1))
+    )
+    y = hs.swapaxes(0, 1).astype(x.dtype)  # [B,S,d]
+    y = rms_norm_simple(y, params["head_norm"], cfg.norm_eps)
+    # GeGLU up/down projection (proj factor 4/3)
+    up = y @ params["w_up"].astype(x.dtype)
+    half = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    return y @ params["w_down"].astype(x.dtype)
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    c, n, hid, m = init_slstm_state(cfg, batch)
+    return {
+        "conv": jnp.zeros(
+            (batch, cfg.ssm_conv_width - 1, cfg.d_model), dtype
+        ),
+        "c": c, "n": n, "h": hid, "m": m,
+    }
+
+
+def slstm_decode_step(
+    params: Params, x: jax.Array, cfg: ArchConfig, cache: Params
+) -> tuple[jax.Array, Params]:
+    bsz = x.shape[0]
+    hist = jnp.concatenate([cache["conv"], x], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    xc_t = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"].astype(x.dtype)
+    )
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state, hid = _slstm_cell(params, cfg, x[:, 0], xc_t, state)
+    y = hid[:, None, :].astype(x.dtype)
+    y = rms_norm_simple(y, params["head_norm"], cfg.norm_eps)
+    up = y @ params["w_up"].astype(x.dtype)
+    half = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    y = y @ params["w_down"].astype(x.dtype)
+    c, n, hid_f, m = state
+    return y, {"conv": hist[:, 1:], "c": c, "n": n, "h": hid_f, "m": m}

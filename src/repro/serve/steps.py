@@ -1,0 +1,61 @@
+"""The two jittable serving primitives the launcher/dry-run lowers:
+
+* ``make_prefill_step``  — full-sequence forward over the prompt batch
+  (the ``prefill_*`` shapes);
+* ``make_serve_step``    — one new token against a KV/state cache of
+  ``seq_len`` (the ``decode_*`` / ``long_*`` shapes), including sampling.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.transformer import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        # next-token distribution at the prompt boundary
+        return logits[:, -1].astype(jnp.float32)
+
+    return prefill_step
+
+
+def sample_token(
+    logits: jax.Array, key: jax.Array, temperature: float = 0.0
+) -> jax.Array:
+    """Greedy (T=0) or temperature sampling. logits: [B, V] f32."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def make_serve_step(model: Model, temperature: float = 0.0) -> Callable:
+    """decode: (params, cache, tokens [B], pos [B], key) ->
+    (new_tokens [B], cache)."""
+
+    def serve_step(params, cache, tokens, pos, key):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return sample_token(logits, key, temperature), cache
+
+    return serve_step
+
+
+LONG_CONTEXT_THRESHOLD = 131_072
+
+
+def decode_cache_window(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Cache window for a decode shape.
+
+    Sub-quadratic archs carry O(1) recurrent state; their *attention*
+    components (e.g. Zamba2's shared blocks) switch to a sliding-window KV
+    in the long-context regime (>=128k), bounding memory at 500k+ tokens.
+    Ordinary decode shapes keep the full context window.
+    """
+    if cfg.subquadratic and shape.seq_len >= LONG_CONTEXT_THRESHOLD:
+        return cfg.long_context_window
+    return shape.seq_len

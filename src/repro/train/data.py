@@ -1,0 +1,85 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Batches are pure functions of ``(seed, step)`` via counter-based PRNG
+(threefry fold-in), so the pipeline is:
+
+* **resumable** — restart at step k reproduces exactly the batch stream a
+  non-failed run would have seen (no state files needed beyond the step);
+* **shardable** — each data-parallel host can slice its rows of the global
+  batch by index with no coordination;
+* **learnable** — token streams follow a fixed random-affine Markov chain,
+  so small models show decreasing loss within a few hundred steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.transformer import Model
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    # Markov-chain structure: t_{i+1} = (a * t_i + b + eps) % vocab
+    mult: int = 6_364_136_223_846_793_005 % 65_521
+    noise_levels: int = 4
+
+
+class SyntheticStream:
+    """Deterministic batch source for a (model, shape) pair."""
+
+    def __init__(self, model: Model, shape: ShapeSpec,
+                 cfg: DataConfig = DataConfig()):
+        self.model = model
+        self.shape = shape
+        self.cfg = cfg
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        self._jitted = jax.jit(self._make, static_argnums=())
+
+    def _markov_tokens(self, key: jax.Array, b: int, s: int, vocab: int
+                       ) -> jax.Array:
+        k0, k1 = jax.random.split(key)
+        t0 = jax.random.randint(k0, (b,), 0, vocab, jnp.int32)
+        noise = jax.random.randint(
+            k1, (b, s), 0, self.cfg.noise_levels, jnp.int32
+        )
+
+        def step(t, eps):
+            nxt = (t * self.cfg.mult + 17 + eps) % vocab
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, t0, noise.T)
+        return toks.T  # [B, S]
+
+    def _make(self, step: jax.Array) -> dict:
+        mcfg: ArchConfig = self.model.cfg
+        key = jax.random.fold_in(self._base_key, step)
+        specs = self.model.input_specs(self.shape)
+        out = {}
+        for name, spec in specs.items():
+            key, k = jax.random.split(key)
+            if name in ("tokens", "labels"):
+                b, s = (spec.shape if len(spec.shape) == 2
+                        else (spec.shape[0], 1))
+                out[name] = self._markov_tokens(k, b, s, mcfg.vocab_size
+                                                ).reshape(spec.shape)
+            elif name == "positions":
+                base = jnp.broadcast_to(
+                    jnp.arange(spec.shape[-1])[None, None], spec.shape
+                )
+                out[name] = base.astype(spec.dtype)
+            elif name == "pos":
+                out[name] = jnp.zeros(spec.shape, spec.dtype)
+            elif jnp.issubdtype(spec.dtype, jnp.floating):
+                out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+            else:
+                out[name] = jnp.zeros(spec.shape, spec.dtype)
+        return out
+
+    def batch(self, step: int) -> dict:
+        """The batch for global step ``step`` (pure; resume == replay)."""
+        return self._jitted(jnp.asarray(step, jnp.int32))

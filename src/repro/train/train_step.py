@@ -1,0 +1,98 @@
+"""The jittable train step: loss -> grad -> clip -> AdamW, with optional
+microbatch gradient accumulation (``lax.scan`` over microbatches keeps one
+live activation set, trading steps for memory) and remat policies.
+
+The same function lowers for the production mesh in the dry-run: all
+distribution is expressed through in/out shardings at the ``jax.jit``
+boundary (see ``repro.launch.sharding``), never inside the step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+from . import optimizer as opt
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: str = "dots"  # none | full | dots
+    opt: opt.OptimizerConfig = opt.OptimizerConfig()
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """[B, ...] -> [n, B/n, ...] along the leading (batch) axis."""
+    def re(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(re, batch)
+
+
+def make_loss_fn(model: Model, cfg: TrainConfig) -> Callable:
+    def loss_fn(params: PyTree, batch: dict):
+        return model.loss(params, batch, remat=cfg.remat)
+
+    return loss_fn
+
+
+def make_train_step(model: Model, cfg: TrainConfig) -> Callable:
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` — pure and jittable."""
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params_master: PyTree, opt_state: PyTree, batch: dict):
+        # bf16 weight streams: cast the matmul weights ONCE per step
+        # (outside the microbatch loop) — FSDP all-gathers and per-layer
+        # reads then move 2-byte tensors.  AdamW updates the f32 masters;
+        # grads w.r.t. the bf16 copy equal grads w.r.t. the master (the
+        # cast's transpose is a cast).
+        params = model.cast_for_compute(params_master)
+        if cfg.microbatches > 1:
+            mb = _split_microbatches(batch, cfg.microbatches)
+
+            def acc_body(carry, microbatch):
+                gsum, lsum = carry
+                (loss, aux), g = grad_fn(params, microbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + loss), aux
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), auxs = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, gsum)
+            loss = lsum / cfg.microbatches
+            aux = jax.tree.map(lambda x: x[-1], auxs)
+        else:
+            (loss, aux), grads = grad_fn(params, batch)
+        new_params, opt_state, metrics = opt.apply_updates(
+            params_master, grads, opt_state, cfg.opt
+        )
+        metrics = dict(metrics, loss=loss, **aux)
+        return new_params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(model: Model, cfg: TrainConfig) -> Callable:
+    loss_fn = make_loss_fn(model, cfg)
+
+    def step(params: PyTree, batch: dict):
+        loss, aux = loss_fn(params, batch)
+        return dict(aux, loss=loss)
+
+    return step

@@ -1,0 +1,167 @@
+"""Property-based tests: random control-flow programs, all backends agree.
+
+The invariant under test is the paper's correctness argument (§2): "consider
+this runtime from the point of view of one batch member — every time the
+runtime runs one of its blocks, it updates that member exactly as a size-1
+batch would".  We generate random terminating programs with divergent
+branches, bounded loops, and structurally-decreasing recursion, then check
+the local-static interpreter and the PC VM member-for-member against the
+unbatched reference interpreter.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import api, frontend
+from repro.core.frontend import I32
+
+# Small, wrap-safe int arithmetic (identical semantics in np/jnp int32).
+_BINOPS = [
+    ("add", lambda a, b: a + b),
+    ("sub", lambda a, b: a - b),
+    ("xor", lambda a, b: a ^ b),
+    ("min", lambda a, b: jnp.minimum(a, b)),
+    ("max", lambda a, b: jnp.maximum(a, b)),
+]
+_CMPS = [
+    ("lt", lambda a, b: a < b),
+    ("le", lambda a, b: a <= b),
+    ("eq", lambda a, b: (a & 3) == (b & 3)),
+]
+
+
+class _Gen:
+    """Deterministic random program generator driven by a hypothesis seed."""
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+
+    def expr(self, fb, scope):
+        a, b = self.rng.choice(scope, 2)
+        name, fn = _BINOPS[self.rng.integers(len(_BINOPS))]
+        return fb.prim(fn, [a, b], name=name)
+
+    def cond(self, fb, scope):
+        a, b = self.rng.choice(scope, 2)
+        name, fn = _CMPS[self.rng.integers(len(_CMPS))]
+        return fb.prim(fn, [a, b], name=name)
+
+    def stmts(self, fb, scope, depth, allow_call):
+        n = int(self.rng.integers(1, 4))
+        for _ in range(n):
+            kind = self.rng.integers(4)
+            if kind == 0 or depth >= 2:
+                scope.append(self.expr(fb, scope))
+            elif kind == 1:
+                c = self.cond(fb, scope)
+                with fb.if_(c):
+                    self.stmts(fb, list(scope), depth + 1, allow_call)
+                if self.rng.integers(2):
+                    with fb.orelse():
+                        self.stmts(fb, list(scope), depth + 1, allow_call)
+            elif kind == 2:
+                # Bounded counter loop (always terminates).
+                i = fb.prim(
+                    lambda: jnp.int32(3), (), name="c3"
+                )
+                with fb.while_(lambda i: i > 0, [i]):
+                    self.stmts(fb, list(scope) + [i], depth + 1, False)
+                    fb.assign(i, lambda i: i - 1, [i])
+            elif allow_call:
+                # Structurally decreasing recursion on 'n'.
+                t = fb.prim(lambda n: n - 1, ["n"], name="dec")
+                arg = self.rng.choice(scope)
+                scope.append(fb.call("f", [t, arg]))
+
+    def build(self):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function(
+            "f",
+            ["n", "x"],
+            ["out"],
+            {"n": I32, "x": I32},
+            {"out": I32},
+        )
+        c = fb.prim(lambda n: n <= 0, ["n"], name="base")
+        with fb.if_(c):
+            fb.copy("x", out="out")
+            fb.return_()
+        scope = ["n", "x"]
+        self.stmts(fb, scope, 0, allow_call=True)
+        a, b = self.rng.choice(scope, 2)
+        fb.assign("out", lambda a, b: a + b, [a, b])
+        fb.return_()
+        pb.add(fb)
+        return pb.build()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    inputs=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(-50, 50)),
+        min_size=1,
+        max_size=6,
+    ),
+)
+def test_backends_agree_on_random_programs(seed, inputs):
+    rng = np.random.default_rng(seed)
+    prog = _Gen(rng).build()
+    n = np.array([i[0] for i in inputs], np.int32)
+    x = np.array([i[1] for i in inputs], np.int32)
+    z = len(inputs)
+    ref = api.autobatch(prog, z, backend="reference", max_depth=64)(
+        {"n": n, "x": x}
+    )["out"]
+    for backend in ("pc", "local"):
+        got = api.autobatch(
+            prog, z, backend=backend, max_depth=64, max_steps=200_000
+        )({"n": n, "x": x})["out"]
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref), err_msg=f"{backend} != reference"
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.lists(st.integers(0, 11), min_size=1, max_size=8),
+)
+def test_fib_any_batch(n):
+    from tests.test_core import build_fib, FIB
+
+    prog = build_fib()
+    arr = np.array(n, np.int32)
+    out = api.autobatch(prog, len(n), backend="pc", max_depth=20)({"n": arr})
+    np.testing.assert_array_equal(np.asarray(out["out"]), FIB[arr])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(1, 500), st.integers(1, 500)),
+        min_size=1,
+        max_size=8,
+    )
+)
+def test_gcd_property(pairs):
+    """gcd via Euclid's loop: result divides both inputs; matches math.gcd."""
+    import math
+
+    pb = frontend.ProgramBuilder()
+    fb = pb.function(
+        "gcd", ["a", "b"], ["out"], {"a": I32, "b": I32}, {"out": I32}
+    )
+    with fb.while_(lambda b: b > 0, ["b"]):
+        fb.copy("b", out="t")
+        fb.assign("b", lambda a, b: a % b, ["a", "b"])
+        fb.copy("t", out="a")
+    fb.copy("a", out="out")
+    fb.return_()
+    pb.add(fb)
+    prog = pb.build()
+    a = np.array([p[0] for p in pairs], np.int32)
+    b = np.array([p[1] for p in pairs], np.int32)
+    out = api.autobatch(prog, len(pairs), backend="pc")({"a": a, "b": b})
+    expect = np.array([math.gcd(int(x), int(y)) for x, y in pairs], np.int32)
+    np.testing.assert_array_equal(np.asarray(out["out"]), expect)

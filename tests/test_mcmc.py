@@ -1,0 +1,130 @@
+"""Tests for the NUTS workload: backend agreement, moments, baselines."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, lowering
+from repro.mcmc import iterative, nuts, targets
+
+
+@pytest.fixture(scope="module")
+def small_nuts():
+    t = targets.isotropic_gaussian(3)
+    s = nuts.NutsSettings(max_tree_depth=5, num_steps=4, steps_per_leaf=2)
+    prog = nuts.build_nuts_program(t, s)
+    inp = nuts.initial_state(t, 4, eps=0.4, seed=2)
+    return t, s, prog, inp
+
+
+class TestNutsProgram:
+    def test_lowering_structure(self, small_nuts):
+        """The recursion forces stacks exactly on build_tree's frame state."""
+        _, _, prog, _ = small_nuts
+        low = lowering.lower(prog)
+        # The recursive frame's parameters must be stacked.
+        for v in ["build_tree/theta", "build_tree/r", "build_tree/j"]:
+            assert v in low.stack_vars
+        # Chain-level accumulators never cross a recursive call.
+        assert "nuts_chain/sum_theta" not in low.stack_vars
+        assert "nuts_chain/sum_sq" not in low.stack_vars
+
+    @pytest.mark.parametrize("backend", ["pc", "local"])
+    def test_agrees_with_reference(self, small_nuts, backend):
+        """Batched NUTS must equal the unbatched oracle member-by-member.
+
+        On an elementwise target the primitives are bitwise-stable under
+        vmap, so whole chaotic trajectories must coincide."""
+        t, s, prog, inp = small_nuts
+        ref = api.autobatch(prog, 4, backend="reference")(inp)
+        out = api.autobatch(
+            prog, 4, backend=backend,
+            max_depth=nuts.recommended_max_depth(s), max_steps=50_000,
+        )(inp)
+        for k in ("theta", "sum_theta", "sum_sq"):
+            np.testing.assert_allclose(
+                np.asarray(out[k]), ref[k], rtol=1e-4, atol=1e-4
+            )
+
+    def test_moments_correlated_gaussian(self):
+        """Sampled marginal moments match the target (paper §4.2 problem)."""
+        t = targets.correlated_gaussian(8, rho=0.9)
+        s = nuts.NutsSettings(max_tree_depth=8, num_steps=60, steps_per_leaf=4)
+        prog = nuts.build_nuts_program(t, s)
+        z = 64
+        inp = nuts.initial_state(t, z, eps=0.25, seed=3)
+        bp = api.autobatch(
+            prog, z, backend="pc",
+            max_depth=nuts.recommended_max_depth(s), max_steps=200_000,
+        )
+        out = bp(inp)
+        assert bool(bp.last_result.converged)
+        n = z * s.num_steps
+        mean = np.asarray(out["sum_theta"]).sum(0) / n
+        ex2 = np.asarray(out["sum_sq"]).sum(0) / n
+        std = np.sqrt(ex2 - mean**2)
+        np.testing.assert_allclose(mean, 0.0, atol=0.12)
+        np.testing.assert_allclose(std, 1.0, atol=0.12)
+
+    def test_divergent_chains_have_low_utilization(self):
+        """Different chains pick different tree depths => util < 1 (Fig. 6)."""
+        t = targets.correlated_gaussian(8, rho=0.9)
+        s = nuts.NutsSettings(max_tree_depth=8, num_steps=10, steps_per_leaf=4)
+        prog = nuts.build_nuts_program(t, s)
+        z = 16
+        bp = api.autobatch(
+            prog, z, backend="pc",
+            max_depth=nuts.recommended_max_depth(s), max_steps=100_000,
+        )
+        bp(nuts.initial_state(t, z, eps=0.25, seed=4))
+        util = bp.utilization["grad"]
+        assert 0.0 < util < 1.0
+
+    def test_logistic_regression_target_runs(self):
+        t = targets.logistic_regression(num_data=200, dim=8, seed=0)
+        s = nuts.NutsSettings(max_tree_depth=6, num_steps=3, steps_per_leaf=2)
+        prog = nuts.build_nuts_program(t, s)
+        z = 4
+        bp = api.autobatch(
+            prog, z, backend="pc",
+            max_depth=nuts.recommended_max_depth(s), max_steps=50_000,
+        )
+        out = bp(nuts.initial_state(t, z, eps=0.05, seed=5))
+        assert bool(bp.last_result.converged)
+        assert np.all(np.isfinite(np.asarray(out["theta"])))
+
+
+class TestIterativeBaseline:
+    def test_moments(self):
+        """The hand-batched iterative rewrite samples the same distribution."""
+        t = targets.correlated_gaussian(8, rho=0.9)
+        s = nuts.NutsSettings(max_tree_depth=8, num_steps=60, steps_per_leaf=4)
+        z = 64
+        inp = nuts.initial_state(t, z, eps=0.25, seed=3)
+        out = iterative.run_batched(t, s, inp["theta0"], inp["eps"], inp["key"])
+        n = z * s.num_steps
+        mean = np.asarray(out["sum_theta"]).sum(0) / n
+        ex2 = np.asarray(out["sum_sq"]).sum(0) / n
+        std = np.sqrt(ex2 - mean**2)
+        np.testing.assert_allclose(mean, 0.0, atol=0.12)
+        np.testing.assert_allclose(std, 1.0, atol=0.12)
+        assert int(out["grads"].sum()) > 0
+
+    def test_matches_autobatched_grad_count_scale(self):
+        """Grad-eval counts of the two implementations are the same order:
+        both run the same doubling procedure over the same trajectories."""
+        t = targets.isotropic_gaussian(4)
+        s = nuts.NutsSettings(max_tree_depth=6, num_steps=5, steps_per_leaf=2)
+        z = 8
+        inp = nuts.initial_state(t, z, eps=0.3, seed=7)
+        prog = nuts.build_nuts_program(t, s)
+        bp = api.autobatch(
+            prog, z, backend="pc",
+            max_depth=nuts.recommended_max_depth(s), max_steps=50_000,
+        )
+        bp(inp)
+        execs, active = bp.last_result.tag_stats["grad"]
+        vm_grads = active * s.grads_per_leaf  # member-leaf evals
+        out = iterative.run_batched(t, s, inp["theta0"], inp["eps"], inp["key"])
+        it_grads = int(out["grads"].sum())
+        assert 0.2 < vm_grads / it_grads < 5.0

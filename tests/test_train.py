@@ -1,0 +1,201 @@
+"""Training substrate tests: optimization, accumulation equivalence,
+checkpoint atomicity/validity, fault-tolerant restart, stragglers."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.models import get_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train import data as data_lib
+from repro.train import fault_tolerance as ft
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+SHAPE = ShapeSpec("t", 32, 4, "train")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config("smollm-135m")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = data_lib.SyntheticStream(model, SHAPE)
+    return model, params, stream
+
+
+class TestOptimizer:
+    def test_loss_decreases(self, setup):
+        model, params, stream = setup
+        tcfg = ts.TrainConfig(
+            opt=opt_lib.OptimizerConfig(
+                peak_lr=1e-2, warmup_steps=5, total_steps=60
+            )
+        )
+        step = jax.jit(ts.make_train_step(model, tcfg))
+        state = opt_lib.init_opt_state(params, tcfg.opt)
+        p = params
+        first = last = None
+        for i in range(60):
+            p, state, m = step(p, state, stream.batch(i))
+            if i < 5:
+                first = float(m["loss"]) if first is None else first
+            last = float(m["loss"])
+        assert last < first - 0.5, (first, last)
+
+    def test_lr_schedule(self):
+        cfg = opt_lib.OptimizerConfig(
+            peak_lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1
+        )
+        assert float(opt_lib.lr_schedule(cfg, jnp.asarray(0))) == 0.0
+        assert float(opt_lib.lr_schedule(cfg, jnp.asarray(10))) == (
+            pytest.approx(1.0)
+        )
+        assert float(opt_lib.lr_schedule(cfg, jnp.asarray(100))) == (
+            pytest.approx(0.1)
+        )
+
+    def test_grad_accumulation_equivalence(self, setup):
+        """k microbatches == one big batch (same update, fp tolerance)."""
+        model, params, stream = setup
+        batch = stream.batch(0)
+        ocfg = opt_lib.OptimizerConfig(peak_lr=1e-3, warmup_steps=0,
+                                       total_steps=10)
+        one = jax.jit(ts.make_train_step(model, ts.TrainConfig(
+            microbatches=1, opt=ocfg)))
+        four = jax.jit(ts.make_train_step(model, ts.TrainConfig(
+            microbatches=4, opt=ocfg)))
+        s0 = opt_lib.init_opt_state(params, ocfg)
+        p1, _, m1 = one(params, s0, batch)
+        p4, _, m4 = four(params, s0, batch)
+        np.testing.assert_allclose(
+            float(m1["loss"]), float(m4["loss"]), rtol=1e-5
+        )
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-5
+            )
+
+    def test_int8_compression_error_feedback(self):
+        """Compression error is carried, not lost: sum over steps of the
+        restored gradients converges to the sum of true gradients."""
+        g = {"g": jax.random.normal(jax.random.PRNGKey(0), (128,)) * 0.01}
+        err = {"g": jnp.zeros((128,))}
+        total = jnp.zeros((128,))
+        for _ in range(50):
+            restored, err = opt_lib.compress_with_feedback(g, err)
+            total = total + restored["g"]
+        np.testing.assert_allclose(
+            np.asarray(total), np.asarray(g["g"]) * 50, rtol=0.02, atol=1e-4
+        )
+
+
+class TestData:
+    def test_deterministic_and_resumable(self, setup):
+        model, _, _ = setup
+        s1 = data_lib.SyntheticStream(model, SHAPE)
+        s2 = data_lib.SyntheticStream(model, SHAPE)
+        b1 = s1.batch(7)
+        _ = s2.batch(3)  # different call history
+        b2 = s2.batch(7)
+        for k in b1:
+            np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+
+    def test_markov_structure_learnable(self, setup):
+        model, _, stream = setup
+        toks = np.asarray(stream.batch(0)["tokens"])
+        v = model.cfg.vocab_size
+        mult = stream.cfg.mult
+        # check t_{i+1} - (a t_i + 17) mod V is small (the noise)
+        pred = (toks[:, :-1].astype(np.int64) * mult + 17) % v
+        diff = (toks[:, 1:].astype(np.int64) - pred) % v
+        assert diff.max() < stream.cfg.noise_levels
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, setup):
+        model, params, _ = setup
+        c = ckpt_lib.Checkpointer(str(tmp_path), async_save=False)
+        c.save(3, params)
+        assert c.latest_step() == 3
+        restored = c.restore(3, like=params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_corrupt_checkpoint_skipped(self, tmp_path, setup):
+        model, params, _ = setup
+        c = ckpt_lib.Checkpointer(str(tmp_path), async_save=False)
+        c.save(1, params)
+        c.save(2, params)
+        # corrupt the newest payload
+        path = os.path.join(str(tmp_path), "step_00000002", "arrays.npz")
+        with open(path, "r+b") as f:
+            f.seek(100)
+            f.write(b"\xde\xad\xbe\xef" * 8)
+        assert c.latest_step() == 1  # falls back to the valid one
+
+    def test_async_save_joins(self, tmp_path, setup):
+        model, params, _ = setup
+        c = ckpt_lib.Checkpointer(str(tmp_path), async_save=True)
+        c.save(5, params)
+        c.wait()
+        assert c.latest_step() == 5
+
+    def test_gc_keeps_k(self, tmp_path, setup):
+        model, params, _ = setup
+        c = ckpt_lib.Checkpointer(str(tmp_path), keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            c.save(s, params)
+        assert c.all_steps() == [3, 4]
+
+
+class TestFaultTolerance:
+    def _make_step(self, setup):
+        model, params, stream = setup
+        tcfg = ts.TrainConfig(opt=opt_lib.OptimizerConfig(
+            peak_lr=1e-3, warmup_steps=0, total_steps=100))
+        raw = jax.jit(ts.make_train_step(model, tcfg))
+
+        def step_fn(state, i):
+            p, o = state
+            p, o, m = raw(p, o, stream.batch(i))
+            return (p, o), m
+
+        return step_fn, (params, opt_lib.init_opt_state(params, tcfg.opt))
+
+    def test_restart_recovers_and_replays(self, tmp_path, setup):
+        step_fn, state = self._make_step(setup)
+        # ground truth: run 30 steps without failures
+        c0 = ckpt_lib.Checkpointer(str(tmp_path / "a"), async_save=False)
+        loop = ft.ResilientLoop(step_fn, c0, save_every=10)
+        truth, rep0 = loop.run(state, 30)
+        assert rep0.restarts == 0
+        # now with two injected failures
+        c1 = ckpt_lib.Checkpointer(str(tmp_path / "b"), async_save=False)
+        loop = ft.ResilientLoop(step_fn, c1, save_every=10)
+        fails = {13, 27}
+
+        def failure_hook(i):
+            if i in fails:
+                fails.remove(i)
+                raise RuntimeError("simulated node failure")
+
+        recovered, rep = loop.run(state, 30, failure_hook=failure_hook)
+        assert rep.restarts == 2
+        assert rep.final_step == 30
+        for a, b in zip(jax.tree.leaves(truth), jax.tree.leaves(recovered)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_straggler_detection(self):
+        pol = ft.StragglerPolicy(threshold=2.0, warmup=3)
+        for i in range(10):
+            assert not pol.observe(i, 0.1)
+        assert pol.observe(10, 0.5)  # 5x the EMA
+        assert len(pol.flagged) == 1
+        # EMA not polluted by the outlier
+        assert not pol.observe(11, 0.12)

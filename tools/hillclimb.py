@@ -1,0 +1,94 @@
+"""Perf-iteration driver: run a cell with a named variant and diff the
+roofline terms against the stored baseline artifact.
+
+    PYTHONPATH=src python tools/hillclimb.py --arch X --shape Y \
+        [--kv-int8] [--remat dots] [--microbatches 4] [--q-chunk 256] \
+        [--window 2048] [--compress-grads] [--multi-pod] [--tag name]
+
+Prints before/after for t_compute / t_memory / t_collective / peak and
+appends a JSON record to benchmarks/artifacts/hillclimb_log.jsonl.
+"""
+from repro.launch import dryrun  # must be first (XLA_FLAGS)
+
+import argparse
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--param-bf16", action="store_true",
+                    help="serve with bf16 weights (deployment checkpoint)")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--mesh", default=None,
+                    help="logical mesh DxM over the same chips, e.g. 32x8")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.kv_int8:
+        overrides["kv_cache_dtype"] = "int8"
+    if args.param_bf16:
+        overrides["param_dtype"] = "bfloat16"
+    if args.q_chunk:
+        overrides["attn_q_chunk"] = args.q_chunk
+    if args.window:
+        overrides["long_context_window"] = args.window
+    if args.capacity_factor:
+        overrides["capacity_factor"] = args.capacity_factor
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    base_path = os.path.join(
+        ART, f"{args.arch}__{args.shape}__{mesh_name}.json"
+    )
+    base = json.load(open(base_path)) if os.path.exists(base_path) else None
+
+    mesh_shape = (tuple(int(x) for x in args.mesh.split("x"))
+                  if args.mesh else None)
+    res = dryrun.run_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        remat=args.remat, compress_grads=args.compress_grads,
+        cfg_overrides=overrides or None, microbatches=args.microbatches,
+        mesh_shape=mesh_shape, verbose=False,
+    )
+    res["variant"] = {
+        "tag": args.tag, "overrides": overrides, "remat": args.remat,
+        "mesh": args.mesh,
+        "microbatches": args.microbatches,
+        "compress_grads": args.compress_grads,
+    }
+
+    def row(name, b, v):
+        delta = (v - b) / b * 100 if b else float("nan")
+        print(f"  {name:16s} {b:12.4g} -> {v:12.4g}  ({delta:+.1f}%)")
+
+    print(f"{args.arch} x {args.shape} on {mesh_name}  [{args.tag}]")
+    if base:
+        for k in ("t_compute", "t_memory", "t_collective",
+                  "collective_bytes", "peak_bytes", "hlo_bytes",
+                  "roofline_fraction"):
+            row(k, float(base.get(k, 0)), float(res.get(k, 0)))
+        if "t_memory_flash" in res and "t_memory_flash" in base:
+            row("t_memory_flash", base["t_memory_flash"],
+                res["t_memory_flash"])
+    else:
+        print(json.dumps({k: res[k] for k in (
+            "t_compute", "t_memory", "t_collective", "peak_bytes",
+            "roofline_fraction")}, indent=2, default=float))
+    with open(os.path.join(ART, "hillclimb_log.jsonl"), "a") as f:
+        f.write(json.dumps(res, default=float) + "\n")
+
+
+if __name__ == "__main__":
+    main()

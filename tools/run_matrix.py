@@ -1,0 +1,62 @@
+"""Sweep the full dry-run matrix, one JSON artifact per cell.
+
+    PYTHONPATH=src python tools/run_matrix.py [--multi-pod] [--only arch]
+
+Resilient: failures are recorded as artifacts with an "error" field and
+the sweep continues.  Already-present artifacts are skipped unless
+--force.
+"""
+# NOTE: importing repro.launch.dryrun FIRST sets XLA_FLAGS before jax init.
+from repro.launch import dryrun  # noqa: E402  (must be first)
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(ART, exist_ok=True)
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    cells = dryrun.all_cells()
+    if args.only:
+        cells = [c for c in cells if c[0] == args.only]
+    t_start = time.time()
+    for i, (arch, shape) in enumerate(cells):
+        path = os.path.join(ART, f"{arch}__{shape}__{mesh_name}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"[{i+1}/{len(cells)}] skip {arch} x {shape} (exists)")
+            continue
+        print(f"[{i+1}/{len(cells)}] {arch} x {shape} on {mesh_name} ...",
+              flush=True)
+        t0 = time.time()
+        try:
+            res = dryrun.run_cell(
+                arch, shape, multi_pod=args.multi_pod, verbose=False
+            )
+        except Exception as e:
+            res = {
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+            print(f"    FAILED: {res['error']}", flush=True)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=float)
+        if "error" not in res:
+            print(f"    ok {time.time()-t0:.0f}s bound={res['bottleneck']} "
+                  f"peak={res['peak_bytes']/1e9:.1f}GB "
+                  f"roof={res['roofline_fraction']:.4f}", flush=True)
+    print(f"matrix done in {(time.time()-t_start)/60:.1f} min")
+
+
+if __name__ == "__main__":
+    main()
