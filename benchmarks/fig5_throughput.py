@@ -23,9 +23,7 @@ import argparse
 import sys
 
 import jax
-import numpy as np
 
-from repro.core import api
 from repro.mcmc import iterative, nuts, targets
 
 from .common import Table, best_of
@@ -49,25 +47,43 @@ def throughput_sweep(
         max_tree_depth=max_tree_depth, num_steps=num_steps,
         steps_per_leaf=steps_per_leaf,
     )
-    prog = nuts.build_nuts_program(target, settings)
     gpl = settings.grads_per_leaf
     tab = Table(
         f"Fig 5 — NUTS grad evals/sec "
         f"(logreg n={num_data} d={dim}, {num_steps} steps/chain)",
         ["batch", *arms],
     )
+    # One kernel per backend arm: the trace and (for pc) the stack-explicit
+    # lowering are built once and shared across every batch size in the
+    # sweep — only the per-batch-size executors are (re)compiled.
+    kernels = {
+        arm: nuts.make_nuts_kernel(
+            target, settings, backend=arm, max_steps=500_000
+        )
+        for arm in arms
+        if arm in ("pc", "local", "local_eager")
+    }
+    counter = None
+    if "unbatched" in arms:
+        kernels["unbatched"] = nuts.make_nuts_kernel(
+            target, settings, backend="reference"
+        )
+        # Grad counter for the unbatched arm (same trajectories in
+        # expectation): reuse the pc kernel when it is in the sweep anyway.
+        counter = kernels.get("pc") or nuts.make_nuts_kernel(
+            target, settings, max_steps=500_000
+        )
 
     for z in batch_sizes:
-        inputs = nuts.initial_state(target, z, eps=eps, seed=0)
+        theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
         row = [z]
         for arm in arms:
             if arm == "iterative":
                 run = iterative.make_batched(target, settings)
-                out = run(inputs["theta0"], inputs["eps"], inputs["key"])
+                out = run(theta0, eps_arg, keys)
                 grads = int(out["grads"].sum())  # warm-up/compile above
                 t = best_of(lambda: jax.block_until_ready(
-                    run(inputs["theta0"], inputs["eps"], inputs["key"])
-                    ["theta"]
+                    run(theta0, eps_arg, keys)["theta"]
                 ), repeats)
                 row.append(grads / t)
                 continue
@@ -75,31 +91,16 @@ def throughput_sweep(
                 if z > unbatched_cap:
                     row.append(float("nan"))
                     continue
-                bp = api.autobatch(prog, z, backend="reference")
-                # count grads via a pc run (same trajectories in expectation)
-                cnt = api.autobatch(
-                    prog, z, backend="pc",
-                    max_depth=nuts.recommended_max_depth(settings),
-                    max_steps=500_000,
-                )
-                cnt(inputs)
-                execs, active = cnt.last_result.tag_stats["grad"]
-                t = best_of(lambda: bp(inputs), 1)
+                counter(theta0, eps_arg, keys)
+                execs, active = counter.tag_stats["grad"]
+                ref = kernels["unbatched"]
+                t = best_of(lambda: ref(theta0, eps_arg, keys), 1)
                 row.append(active * gpl / t)
                 continue
-            backend = arm
-            bp = api.autobatch(
-                prog, z, backend=backend,
-                max_depth=nuts.recommended_max_depth(settings),
-                max_steps=500_000,
-            )
-            bp(inputs)  # warm-up (compile)
-            if backend == "pc":
-                execs, active = bp.last_result.tag_stats["grad"]
-            else:
-                execs = bp.batcher.stats.tag_execs["grad"]
-                active = bp.batcher.stats.tag_active["grad"]
-            t = best_of(lambda: bp(inputs), repeats)
+            kern = kernels[arm]
+            kern(theta0, eps_arg, keys)  # warm-up (compile)
+            execs, active = kern.tag_stats["grad"]
+            t = best_of(lambda: kern(theta0, eps_arg, keys), repeats)
             row.append(active * gpl / t)
         tab.add(*row)
     return tab

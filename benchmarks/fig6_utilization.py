@@ -13,9 +13,6 @@ from __future__ import annotations
 import argparse
 import sys
 
-import numpy as np
-
-from repro.core import api
 from repro.mcmc import nuts, targets
 
 from .common import Table
@@ -36,23 +33,20 @@ def utilization_sweep(
         max_tree_depth=max_tree_depth, num_steps=num_steps,
         steps_per_leaf=steps_per_leaf,
     )
-    prog = nuts.build_nuts_program(target, settings)
     tab = Table(
         f"Fig 6 — batch utilization of gradient evals "
         f"(correlated Gaussian d={dim} rho={rho}, {num_steps} trajectories)",
         ["batch", "pc", "local_static", "pc/local"],
     )
+    # One kernel per arm across the sweep; the pc lowering is shared and
+    # only the per-batch-size executors differ.
+    pc = nuts.make_nuts_kernel(target, settings, backend="pc")
+    loc = nuts.make_nuts_kernel(target, settings, backend="local")
     for z in batch_sizes:
-        inputs = nuts.initial_state(target, z, eps=eps, seed=0)
-        pc = api.autobatch(
-            prog, z, backend="pc",
-            max_depth=nuts.recommended_max_depth(settings),
-            max_steps=1_000_000,
-        )
-        pc(inputs)
+        theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
+        pc(theta0, eps_arg, keys)
         u_pc = pc.utilization["grad"]
-        loc = api.autobatch(prog, z, backend="local")
-        loc(inputs)
+        loc(theta0, eps_arg, keys)
         u_loc = loc.utilization["grad"]
         tab.add(z, u_pc, u_loc, u_pc / u_loc if u_loc else float("nan"))
     return tab

@@ -11,10 +11,8 @@ the data) and gradient-evaluation throughput/utilization.
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.core import api
 from repro.mcmc import nuts, targets
 
 
@@ -38,32 +36,33 @@ def main():
     print(f"target: {target.name}; {args.chains} chains x "
           f"{args.steps} NUTS trajectories")
 
-    program = nuts.build_nuts_program(target, settings)
-    batched = api.autobatch(
-        program, args.chains, backend="pc",
-        max_depth=nuts.recommended_max_depth(settings),
-        max_steps=2_000_000,
+    kernel = nuts.make_nuts_kernel(
+        target, settings, backend="pc", max_steps=2_000_000
     )
-    inputs = nuts.initial_state(target, args.chains, eps=eps, seed=0)
+    theta0, eps_arg, keys = nuts.initial_state(
+        target, args.chains, eps=eps, seed=0
+    )
 
     t0 = time.time()
-    out = batched(inputs)  # includes compile
+    state = kernel(theta0, eps_arg, keys)  # includes compile
     t_compile_run = time.time() - t0
     t0 = time.time()
-    out = batched(inputs)
+    state = kernel(theta0, eps_arg, keys)  # pure cache hit on the same avals
     t_warm = time.time() - t0
+    assert kernel.cache_info().hits >= 1
 
-    res = batched.last_result
-    execs, active = res.tag_stats["grad"]
+    res = kernel.last_result
+    execs, active = kernel.tag_stats["grad"]
     grads = active * settings.grads_per_leaf
     print(f"converged: {bool(res.converged)}  VM steps: {int(res.steps)}")
+    print(f"cold run (incl. compile): {t_compile_run:.2f}s")
     print(f"warm run: {t_warm:.2f}s  "
           f"({grads / t_warm:,.0f} member-gradients/sec)")
     print(f"batch utilization of gradient leaves: "
-          f"{batched.utilization['grad']:.3f}")
+          f"{kernel.utilization['grad']:.3f}")
 
     n = args.chains * settings.num_steps
-    mean = np.asarray(out["sum_theta"]).sum(0) / n
+    mean = np.asarray(state["sum_theta"]).sum(0) / n
     print(f"posterior mean norm: {np.linalg.norm(mean):.3f} "
           f"(finite: {np.isfinite(mean).all()})")
 

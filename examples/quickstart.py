@@ -1,64 +1,84 @@
-"""Quickstart: autobatch a recursive program three ways.
+"""Quickstart: autobatch control-intensive programs with one decorator.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Writes a naive recursive Fibonacci + a data-dependent Collatz loop
-against the public API, batches them with the program-counter VM (the
-paper's contribution), and shows the utilization counters that make
-Figure 6 tick.
+The public API is `repro.core.batching.autobatch` — a `vmap`-like decorator
+over restricted Python (or over a builder-built program) that returns a
+callable over positional pytree arguments:
+
+* `Batched(spec)` arguments carry a leading batch axis (`in_axes=0`);
+* `Shared(spec)` arguments are broadcast constants (`in_axes=None`);
+* outputs come back as pytrees;
+* compiled artifacts are cached per `(backend, batch_size, input avals)`,
+  and the pc backend's stack-explicit lowering is shared across batch sizes.
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import api, frontend
-from repro.core.ast_frontend import Namespace
-from repro.core.frontend import I32
+from repro.core import frontend
+from repro.core.batching import Batched, Shared, autobatch
+from repro.core.frontend import F32, I32
 
 # ---------------------------------------------------------------------------
-# 1. The AST frontend: decorate restricted Python, get a batched program.
+# 1. Decorate restricted Python — recursion and all — and call it batched.
 # ---------------------------------------------------------------------------
-ns = Namespace()
 
 
-@ns.define(param_specs={"n": I32}, output_specs=[I32])
+@autobatch(in_specs=(Batched(I32),), out_spec=I32, backend="pc", max_depth=24)
 def fib(n):
     if n < 2:
         return n
     return fib(n - 1) + fib(n - 2)
 
 
-program = ns.program(main="fib")
-batched = api.autobatch(program, batch_size=8, backend="pc", max_depth=24)
 n = np.array([0, 1, 5, 9, 12, 3, 7, 2], np.int32)
-print("fib(n)  =", np.asarray(batched({"n": n})["out"]))
-print("VM steps:", int(batched.last_result.steps),
+print("fib(n)  =", np.asarray(fib(n)))
+print("VM steps:", int(fib.last_result.steps),
       "(8 divergent recursions, one fused XLA loop)")
 
 # ---------------------------------------------------------------------------
-# 2. The builder frontend: explicit control flow, Collatz trajectory length.
+# 2. The builder frontend feeds the same API: Collatz trajectory length.
+#    Shared(step) shows a broadcast constant; the output is a pytree.
 # ---------------------------------------------------------------------------
 pb = frontend.ProgramBuilder()
-fb = pb.function("collatz", ["n"], ["steps"], {"n": I32}, {"steps": I32})
+fb = pb.function(
+    "collatz", ["n", "bound"], ["steps", "peak"],
+    {"n": I32, "bound": I32}, {"steps": I32, "peak": I32},
+)
 fb.const(0, jnp.int32, out="steps")
-with fb.while_(lambda n: n > 1, ["n"]):
+fb.copy("n", out="peak")
+with fb.while_(lambda n, s, b: jnp.logical_and(n > 1, s < b),
+               ["n", "steps", "bound"]):
     is_even = fb.prim(lambda n: n % 2 == 0, ["n"])
     with fb.if_(is_even):
         fb.assign("n", lambda n: n // 2, ["n"])
     with fb.orelse():
         fb.assign("n", lambda n: 3 * n + 1, ["n"])
+    fb.assign("peak", lambda p, n: jnp.maximum(p, n), ["peak", "n"])
     fb.assign("steps", lambda s: s + 1, ["steps"])
 fb.return_()
 pb.add(fb)
 
-collatz = api.autobatch(pb.build(), batch_size=6, backend="pc")
-n = np.array([1, 6, 7, 27, 97, 871], np.int32)
-out = collatz({"n": n})
+collatz = autobatch(
+    pb,
+    in_specs=(Batched(I32), Shared(I32)),   # per-member n, shared step bound
+    out_spec={"steps": "steps", "peak": "peak"},
+    backend="pc",
+)
+out = collatz(np.array([1, 6, 7, 27, 97, 871], np.int32), np.int32(1000))
 print("collatz =", np.asarray(out["steps"]), "(expect 0 8 16 111 118 178)")
+print("peaks   =", np.asarray(out["peak"]))
 
 # ---------------------------------------------------------------------------
-# 3. Backend comparison on the same program.
+# 3. One decorated function, four backends, shared compilation cache.
 # ---------------------------------------------------------------------------
-for backend in ("pc", "local", "reference"):
-    bp = api.autobatch(program, 8, backend=backend, max_depth=24)
-    res = bp({"n": np.array([10] * 8, np.int32)})
-    print(f"{backend:10s} fib(10) -> {np.asarray(res['out'])[0]}")
+for backend in ("pc", "local", "local_eager", "reference"):
+    bp = autobatch(fib.program, backend=backend, max_depth=24)
+    res = bp(np.array([10] * 8, np.int32))
+    print(f"{backend:12s} fib(10) -> {np.asarray(res['out'])[0]}")
+
+# Calling again at the same avals is a pure cache hit (no re-trace,
+# no re-lower, no re-compile); a new batch size reuses the lowering.
+fib(n)
+fib(np.array([4, 5, 6, 7], np.int32))
+print("cache:", fib.cache_info())

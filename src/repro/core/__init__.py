@@ -4,15 +4,32 @@ Source IR (Fig. 2) -> lowering with the five compiler optimizations ->
 either the host-recursive local-static interpreter (Algorithm 1) or the
 fully-compiled program-counter VM (Algorithm 2).
 """
-from . import analysis, api, frontend, ir, local_static, lowering, pc_vm, reference
-from .api import BatchedProgram, autobatch
+from . import (
+    analysis,
+    api,
+    ast_frontend,
+    batching,
+    frontend,
+    ir,
+    local_static,
+    lowering,
+    pc_vm,
+    reference,
+)
+from .api import BatchedProgram
+from .ast_frontend import Namespace
+from .batching import AutobatchedFunction, Batched, Shared, autobatch
 from .frontend import BOOL, F32, I32, FunctionBuilder, ProgramBuilder, spec
 
 __all__ = [
     "analysis",
     "api",
+    "ast_frontend",
     "autobatch",
+    "AutobatchedFunction",
+    "Batched",
     "BatchedProgram",
+    "batching",
     "BOOL",
     "F32",
     "frontend",
@@ -21,8 +38,10 @@ __all__ = [
     "ir",
     "local_static",
     "lowering",
+    "Namespace",
     "pc_vm",
     "ProgramBuilder",
     "reference",
+    "Shared",
     "spec",
 ]

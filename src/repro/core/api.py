@@ -1,4 +1,15 @@
-"""Public API of the autobatching core.
+"""Legacy dict-based API of the autobatching core (deprecated shim).
+
+.. deprecated::
+    This module is kept as a thin compatibility shim.  New code should use
+    the decorator-first, pytree-native API in :mod:`repro.core.batching`::
+
+        from repro.core.batching import autobatch, Batched, Shared
+
+    which accepts positional pytree arguments, caches compiled artifacts
+    across batch sizes, and unifies the two frontends.
+
+Legacy usage::
 
     from repro.core import api, frontend
 
@@ -22,9 +33,8 @@ Backends
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
-
-import jax
+import warnings
+from typing import Any, Optional
 
 from . import ir, local_static, lowering, pc_vm, reference
 
@@ -66,8 +76,14 @@ class BatchedProgram:
                 program, batch_size, jit_blocks=(backend == "local")
             )
         # "reference" needs no preparation.
+        self._ran = False
 
     def __call__(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        self._ran = True
+        if self.backend in ("local", "local_eager"):
+            # Per-run counters, matching the pc backend's last_result
+            # semantics (the batcher accumulates across runs by itself).
+            self.batcher.stats = local_static.LocalStats()
         if self.backend == "pc":
             # Qualify input names for the merged namespace.
             q = {
@@ -95,11 +111,18 @@ class BatchedProgram:
 
     @property
     def utilization(self) -> dict[str, float]:
-        """Per-tag batch utilization of the last pc-backend run.
+        """Per-tag batch utilization of the last run (paper Figure 6).
 
-        utilization(tag) = active_member_evals / (executions * batch_size),
-        the quantity plotted in the paper's Figure 6.
+        ``utilization[tag] = active_member_evals / (executions * batch_size)``.
+
+        Semantics (identical on every backend): before any run, returns
+        ``{}``; after a run, every tag the program executed maps to a float
+        in ``[0, 1]`` (``0.0`` for tags that executed with no active
+        members).  The ``reference`` backend keeps no counters and always
+        returns ``{}``.
         """
+        if not self._ran:
+            return {}
         if self.backend == "pc":
             if self.last_result is None:
                 return {}
@@ -122,4 +145,15 @@ class BatchedProgram:
 def autobatch(
     program: ir.Program, batch_size: int, backend: str = "pc", **kw
 ) -> BatchedProgram:
+    """Deprecated: use :func:`repro.core.batching.autobatch` instead.
+
+    Kept as a thin shim over :class:`BatchedProgram` for callers still on
+    the dict-of-names calling convention.
+    """
+    warnings.warn(
+        "repro.core.api.autobatch is deprecated; use the pytree-native "
+        "repro.core.batching.autobatch instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return BatchedProgram(program, batch_size, backend=backend, **kw)

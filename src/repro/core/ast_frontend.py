@@ -48,7 +48,14 @@ def _ret_names(n: int) -> tuple[str, ...]:
 
 
 class Namespace:
-    """A registry of autobatchable functions that may call each other."""
+    """A registry of autobatchable functions that may call each other.
+
+    This is the *unified* frontend namespace: it holds both restricted-Python
+    functions (AST-transformed on demand) and pre-built IR functions coming
+    from :class:`repro.core.frontend.FunctionBuilder`.  Either kind may call
+    the other by name — ``trace()`` assembles them into one
+    :class:`ir.Program`.
+    """
 
     def __init__(self):
         self._specs: dict[str, tuple[dict, list]] = {}
@@ -56,23 +63,76 @@ class Namespace:
         self._built: dict[str, ir.Function] = {}
 
     def define(self, param_specs: dict, output_specs: Sequence) -> Callable:
+        """Decorator registering a restricted-Python function."""
+
         def deco(fn: Callable) -> Callable:
             name = fn.__name__
             self._specs[name] = (dict(param_specs), list(output_specs))
             self._pyfns[name] = fn
+            # Redefinition shadows: drop any IR built from a previous body.
+            self._built.pop(name, None)
             return fn
 
         return deco
 
-    def program(self, main: str) -> ir.Program:
-        for name in self._pyfns:
-            if name not in self._built:
-                self._built[name] = self._transform(name)
-        prog = ir.Program(functions=dict(self._built), main=main)
+    def add(self, func) -> ir.Function:
+        """Register a builder-defined function (or a raw ``ir.Function``).
+
+        Accepts a :class:`repro.core.frontend.FunctionBuilder` (built here)
+        or an already-built :class:`ir.Function`.  Registered builder
+        functions are callable from restricted-Python functions and vice
+        versa.
+        """
+        if isinstance(func, frontend.FunctionBuilder):
+            func = func.build()
+        if not isinstance(func, ir.Function):
+            raise TypeError(f"expected FunctionBuilder or ir.Function, got {func!r}")
+        self._built[func.name] = func
+        return func
+
+    def names(self) -> set[str]:
+        return set(self._pyfns) | set(self._built)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._pyfns or name in self._built
+
+    def trace(self, main: str, prune: bool = True) -> ir.Program:
+        """Assemble the program rooted at ``main``.
+
+        AST functions are transformed on demand; with ``prune=True`` only
+        functions reachable from ``main`` through ``Call`` ops are included
+        (a shared namespace may hold unrelated function families).
+        """
+        if main not in self:
+            raise ValueError(f"main function {main!r} is not registered")
+        functions: dict[str, ir.Function] = {}
+        worklist = [main]
+        while worklist:
+            name = worklist.pop()
+            if name in functions:
+                continue
+            functions[name] = self._function(name)
+            for blk in functions[name].blocks:
+                for op in blk.ops:
+                    if isinstance(op, ir.Call) and op.callee not in functions:
+                        worklist.append(op.callee)
+        if not prune:
+            for name in self.names():
+                functions.setdefault(name, self._function(name))
+        prog = ir.Program(functions=functions, main=main)
         prog.validate()
         return prog
 
+    def program(self, main: str) -> ir.Program:
+        """Back-compat alias: build *every* registered function."""
+        return self.trace(main, prune=False)
+
     # ------------------------------------------------------------------
+
+    def _function(self, name: str) -> ir.Function:
+        if name not in self._built:
+            self._built[name] = self._transform(name)
+        return self._built[name]
 
     def _transform(self, name: str) -> ir.Function:
         fn = self._pyfns[name]
@@ -226,7 +286,7 @@ class _Converter:
         return (
             isinstance(e, ast.Call)
             and isinstance(e.func, ast.Name)
-            and e.func.id in self.ns._pyfns
+            and e.func.id in self.ns
         )
 
     def _contains_registered_call(self, e: ast.expr) -> bool:

@@ -1,0 +1,794 @@
+"""Decorator-first, pytree-native autobatching API (the ``vmap``-like surface).
+
+This is the public entry point of the autobatching core.  Where the legacy
+``api.autobatch(program, batch_size)`` interface consumed a hand-built IR
+program and a dict of qualified string names, this module exposes the paper's
+"general program transformation" the way users expect to hold it: a decorator
+over restricted Python (or over a :class:`~repro.core.frontend.FunctionBuilder`
+program) returning a callable over **positional pytree arguments**::
+
+    from repro.core.batching import autobatch, Batched, Shared
+    from repro.core.frontend import I32
+
+    @autobatch(in_specs=(Batched(I32),), out_spec=I32, backend="pc")
+    def fib(n):
+        if n < 2:
+            return n
+        return fib(n - 1) + fib(n - 2)
+
+    fib(np.arange(8, dtype=np.int32))        # -> [8] int32 array
+
+Argument model (the ``in_axes`` analog)
+---------------------------------------
+``Batched(spec)``  — per-member state: the call-time value carries a leading
+                     batch axis on every leaf (``vmap``'s ``in_axes=0``).
+``Shared(spec)``   — broadcast constants (step sizes, target parameters):
+                     the call-time value has *no* batch axis and is shared by
+                     every member (``vmap``'s ``in_axes=None``).
+
+Specs are pytrees of ``jax.ShapeDtypeStruct`` (arrays and dtypes are
+accepted and normalized).  A multi-leaf pytree argument binds its leaves to
+consecutive IR parameters in flatten order; the binding is recorded on the
+program's main :class:`ir.Function` as an :class:`ir.Interface` so the
+calling convention travels with the IR.
+
+Execution cache
+---------------
+Tracing (frontend -> IR) happens once per decorated function; the pc
+backend's stack-explicit lowering happens once per *program*; per-batch-size
+executors and per-aval compiled artifacts are memoized under a
+``(backend, batch_size, input avals)`` key.  ``cache_info()`` exposes the
+counters so callers (and tests) can prove that a repeat call at the same
+avals performs no re-trace, no re-lower, and no re-compile, and that a call
+at a *new* batch size reuses the lowering.
+
+AOT
+---
+``fn.lower(*args)`` returns an :class:`AotLowered` handle with
+``as_text()`` / ``compile()`` / ``cost_analysis()`` — the replacement for the
+legacy ``BatchedProgram.lower_aot``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import ast_frontend, frontend, ir, local_static, lowering, pc_vm, reference
+
+__all__ = [
+    "Batched",
+    "Shared",
+    "AutobatchedFunction",
+    "AotLowered",
+    "autobatch",
+    "DEFAULT_NAMESPACE",
+]
+
+BACKENDS = ("pc", "local", "local_eager", "reference")
+
+#: The default unified frontend namespace.  ``@autobatch`` registrations land
+#: here unless an explicit ``registry=`` is passed, so decorated functions in
+#: one module can call decorated (or builder-registered) functions in another.
+DEFAULT_NAMESPACE = ast_frontend.Namespace()
+
+
+# --------------------------------------------------------------------------
+# Argument annotations
+# --------------------------------------------------------------------------
+
+
+class Batched:
+    """Per-member argument: call-time leaves carry a leading batch axis."""
+
+    shared = False
+
+    def __init__(self, spec: Any):
+        self.spec = spec
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Batched({self.spec!r})"
+
+
+class Shared:
+    """Broadcast argument: one value shared by every batch member."""
+
+    shared = True
+
+    def __init__(self, spec: Any):
+        self.spec = spec
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Shared({self.spec!r})"
+
+
+def _as_spec(x: Any) -> jax.ShapeDtypeStruct:
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return jax.ShapeDtypeStruct(tuple(x.shape), jnp.dtype(x.dtype))
+    return jax.ShapeDtypeStruct((), jnp.dtype(x))
+
+
+def _specs_eq(a: jax.ShapeDtypeStruct, b: jax.ShapeDtypeStruct) -> bool:
+    return tuple(a.shape) == tuple(b.shape) and a.dtype == b.dtype
+
+
+def _flatten_spec(entry: Any) -> tuple[list[jax.ShapeDtypeStruct], Any, bool]:
+    """Normalize one ``in_specs`` entry -> (leaf specs, treedef, shared)."""
+    wrap = entry if isinstance(entry, (Batched, Shared)) else Batched(entry)
+    leaves, treedef = jax.tree_util.tree_flatten(wrap.spec)
+    if not leaves:
+        raise TypeError(f"argument spec {entry!r} has no leaves")
+    return [_as_spec(l) for l in leaves], treedef, wrap.shared
+
+
+# --------------------------------------------------------------------------
+# Backend executors (one per (backend, batch_size); own the compiled state)
+# --------------------------------------------------------------------------
+
+
+class _PcExecutor:
+    def __init__(self, lowered: ir.LoweredProgram, main: str,
+                 config: pc_vm.VMConfig):
+        self.main = main
+        self.batch_size = config.batch_size
+        self.vm = pc_vm.ProgramCounterVM(lowered, config)
+        self.last_result: Optional[pc_vm.VMResult] = None
+
+    def _qualify(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        return {ir.qualify(self.main, k): v for k, v in inputs.items()}
+
+    def run(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        res = self.vm.run(self._qualify(inputs))
+        self.last_result = res
+        return {k.split("/", 1)[1]: v for k, v in res.outputs.items()}
+
+    def lower(self, inputs: dict[str, Any]):
+        return self.vm.lower(self._qualify(inputs))
+
+    @property
+    def tag_stats(self) -> dict[str, tuple[int, int]]:
+        if self.last_result is None:
+            return {}
+        return dict(self.last_result.tag_stats)
+
+
+class _LocalExecutor:
+    def __init__(self, program: ir.Program, batch_size: int, jit_blocks: bool):
+        self.batch_size = batch_size
+        self.batcher = local_static.LocalStaticBatcher(
+            program, batch_size, jit_blocks=jit_blocks
+        )
+        self._ran = False
+        self.last_result = None
+
+    def run(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        # Per-run counters, matching the pc executor's last_result semantics
+        # (LocalStaticBatcher accumulates across runs by itself).
+        self.batcher.stats = local_static.LocalStats()
+        out = self.batcher.run(inputs)
+        self._ran = True
+        return out
+
+    @property
+    def tag_stats(self) -> dict[str, tuple[int, int]]:
+        if not self._ran:
+            return {}
+        st = self.batcher.stats
+        return {
+            tag: (st.tag_execs.get(tag, 0), st.tag_active.get(tag, 0))
+            for tag in st.tag_execs
+        }
+
+
+class _ReferenceExecutor:
+    def __init__(self, program: ir.Program, batch_size: int):
+        self.program = program
+        self.batch_size = batch_size
+        self.last_result = None
+
+    def run(self, inputs: dict[str, Any]) -> dict[str, Any]:
+        return reference.run_reference_batch(self.program, inputs)
+
+    @property
+    def tag_stats(self) -> dict[str, tuple[int, int]]:
+        return {}
+
+
+# --------------------------------------------------------------------------
+# AOT handle
+# --------------------------------------------------------------------------
+
+
+class AotLowered:
+    """Handle over an AOT-lowered batched computation (pc backend).
+
+    Replaces the legacy ``BatchedProgram.lower_aot``: supports ``as_text()``
+    for StableHLO inspection, ``compile()`` for ahead-of-time compilation,
+    and ``cost_analysis()`` (flops/bytes estimates from the compiled
+    executable when available, falling back to the lowering).
+    """
+
+    def __init__(self, lowered):
+        self._lowered = lowered
+        self._compiled = None
+
+    def as_text(self) -> str:
+        return self._lowered.as_text()
+
+    def compile(self):
+        if self._compiled is None:
+            self._compiled = self._lowered.compile()
+        return self._compiled
+
+    def cost_analysis(self) -> dict[str, float]:
+        try:
+            cost = self.compile().cost_analysis()
+        except Exception:
+            cost = self._lowered.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        return dict(cost or {})
+
+
+# --------------------------------------------------------------------------
+# The autobatched callable
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CacheInfo:
+    hits: int
+    misses: int
+    entries: int
+    lowerings: int
+    traces: int
+
+
+class AutobatchedFunction:
+    """A batched callable over positional pytree arguments.
+
+    Produced by :func:`autobatch`; do not construct directly.  Calling it
+    flattens each positional argument against its declared
+    ``Batched``/``Shared`` spec, broadcasts shared leaves across the batch,
+    runs the backend, and unflattens the flat IR outputs into the declared
+    result pytree.
+    """
+
+    def __init__(
+        self,
+        *,
+        registry: ast_frontend.Namespace,
+        main: str,
+        program: Optional[ir.Program],
+        iface_args: tuple[ir.ArgBinding, ...],
+        arg_specs: dict[str, jax.ShapeDtypeStruct],
+        out_treedef,
+        out_leaves: tuple[str, ...],
+        backend: str,
+        batch_size: Optional[int],
+        max_depth: int,
+        max_steps: int,
+        use_kernel: bool,
+        collect_stats: bool,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self.registry = registry
+        self.main = main
+        self.backend = backend
+        self.batch_size = batch_size
+        self._program = program
+        self._iface = ir.Interface(
+            args=iface_args, out_treedef=out_treedef, out_leaves=out_leaves
+        )
+        self._arg_specs = arg_specs
+        self._vm_opts = dict(
+            max_depth=max_depth, max_steps=max_steps, use_kernel=use_kernel,
+            collect_block_stats=collect_stats,
+        )
+        # Caches + instrumentation.
+        self._lowered: Optional[ir.LoweredProgram] = None
+        self._executors: dict[int, Any] = {}
+        self._aval_cache: dict[tuple, Any] = {}
+        self._hits = 0
+        self._misses = 0
+        self._lower_count = 0
+        self._trace_count = 0
+        self._last_executor = None
+        # Pins: what this wrapper re-asserts into the namespace before its
+        # (lazy) first trace, so it always traces *its own* definition even
+        # if another registration shadowed the name afterwards.  The
+        # decorator path pins (fn, param_specs, output_specs); the builder
+        # paths pin the ir.Function objects they registered.
+        self._pinned: Optional[tuple] = None
+        self._pinned_funcs: dict[str, ir.Function] = {}
+        self.__name__ = main
+
+    # ------------------------------------------------------------------
+    # Program / lowering / executor caches
+    # ------------------------------------------------------------------
+
+    @property
+    def program(self) -> ir.Program:
+        """The traced Fig-2 IR program (traced once, then cached)."""
+        if self._program is None:
+            # Re-assert pinned definitions: shadowing is last-wins for
+            # *name lookups*, but a wrapper always runs what it wrapped.
+            if self._pinned is not None:
+                fn, param_specs, output_specs = self._pinned
+                if self.registry._pyfns.get(self.main) is not fn:
+                    self.registry.define(param_specs, output_specs)(fn)
+            for fname, func in self._pinned_funcs.items():
+                if self.registry._built.get(fname) is not func:
+                    self.registry.add(func)
+            self._program = self.registry.trace(self.main)
+            self._trace_count += 1
+        main_fn = self._program.functions[self._program.main]
+        if main_fn.iface is not self._iface:
+            # Record *this* wrapper's calling convention on the IR without
+            # mutating a Function that other wrappers (or the caller's own
+            # Program object) may share.
+            self._program = ir.Program(
+                functions={
+                    **self._program.functions,
+                    self._program.main: ir.dataclass_replace(
+                        main_fn, iface=self._iface
+                    ),
+                },
+                main=self._program.main,
+            )
+        return self._program
+
+    @property
+    def lowered(self) -> ir.LoweredProgram:
+        """The merged stack-explicit program (pc backend; lowered once)."""
+        if self._lowered is None:
+            self._lowered = lowering.lower(self.program)
+            self._lower_count += 1
+        return self._lowered
+
+    def _executor(self, z: int):
+        ex = self._executors.get(z)
+        if ex is not None:
+            return ex
+        if self.backend == "pc":
+            ex = _PcExecutor(
+                self.lowered, self.program.main,
+                pc_vm.VMConfig(batch_size=z, **self._vm_opts),
+            )
+        elif self.backend in ("local", "local_eager"):
+            ex = _LocalExecutor(
+                self.program, z, jit_blocks=(self.backend == "local")
+            )
+        else:
+            ex = _ReferenceExecutor(self.program, z)
+        self._executors[z] = ex
+        return ex
+
+    def cache_info(self) -> CacheInfo:
+        """Executor/compile cache counters.
+
+        ``hits``/``misses`` count calls against the ``(backend, batch_size,
+        input avals)`` key; ``lowerings`` counts stack-explicit lowerings
+        (at most 1 per function regardless of how many batch sizes were
+        run); ``traces`` counts frontend traces.
+        """
+        return CacheInfo(
+            hits=self._hits,
+            misses=self._misses,
+            entries=len(self._aval_cache),
+            lowerings=self._lower_count,
+            traces=self._trace_count,
+        )
+
+    # ------------------------------------------------------------------
+    # Argument binding
+    # ------------------------------------------------------------------
+
+    def _bind(self, args: tuple) -> tuple[dict[str, jax.Array], int]:
+        iface = self._iface
+        if len(args) != len(iface.args):
+            raise TypeError(
+                f"{self.main}() takes {len(iface.args)} positional "
+                f"argument(s), got {len(args)}"
+            )
+        flat: list[tuple[ir.ArgBinding, list]] = []
+        for i, (binding, arg) in enumerate(zip(iface.args, args)):
+            leaves, treedef = jax.tree_util.tree_flatten(arg)
+            if treedef != binding.treedef:
+                raise TypeError(
+                    f"{self.main}() argument {i}: pytree structure "
+                    f"{treedef} does not match declared {binding.treedef}"
+                )
+            flat.append((binding, leaves))
+        # Infer the batch size from the first batched leaf.
+        z = self.batch_size
+        for binding, leaves in flat:
+            if binding.shared:
+                continue
+            for name, leaf in zip(binding.params, leaves):
+                spec = self._arg_specs[name]
+                shape = jnp.shape(leaf)
+                if len(shape) != len(spec.shape) + 1:
+                    raise TypeError(
+                        f"{self.main}() batched leaf {name!r}: expected a "
+                        f"leading batch axis over {tuple(spec.shape)}, got "
+                        f"shape {shape}"
+                    )
+                if z is None:
+                    z = int(shape[0])
+                elif shape[0] != z:
+                    raise TypeError(
+                        f"{self.main}() batched leaf {name!r}: batch axis "
+                        f"{shape[0]} != {z}"
+                    )
+        if z is None:
+            raise TypeError(
+                f"{self.main}() has no Batched arguments; pass "
+                "batch_size= to autobatch()"
+            )
+        inputs: dict[str, jax.Array] = {}
+        for binding, leaves in flat:
+            for name, leaf in zip(binding.params, leaves):
+                spec = self._arg_specs[name]
+                x = jnp.asarray(leaf, spec.dtype)
+                if binding.shared:
+                    if tuple(x.shape) != tuple(spec.shape):
+                        raise TypeError(
+                            f"{self.main}() shared leaf {name!r}: expected "
+                            f"shape {tuple(spec.shape)}, got {tuple(x.shape)}"
+                        )
+                    x = jnp.broadcast_to(x, (z,) + tuple(spec.shape))
+                elif tuple(x.shape) != (z,) + tuple(spec.shape):
+                    raise TypeError(
+                        f"{self.main}() batched leaf {name!r}: expected "
+                        f"shape {(z,) + tuple(spec.shape)}, got "
+                        f"{tuple(x.shape)}"
+                    )
+                inputs[name] = x
+        return inputs, z
+
+    def _aval_key(self, inputs: dict[str, jax.Array], z: int) -> tuple:
+        # Note: _bind forces every leaf to (z,)+spec.shape / spec.dtype, so
+        # today these keys collapse to the batch size; they are kept in
+        # full aval form so the cache contract survives future shape- or
+        # dtype-polymorphic specs.
+        return (
+            self.backend,
+            z,
+            tuple(
+                (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
+                for k, v in sorted(inputs.items())
+            ),
+        )
+
+    # ------------------------------------------------------------------
+    # Execution
+    # ------------------------------------------------------------------
+
+    def __call__(self, *args):
+        inputs, z = self._bind(args)
+        key = self._aval_key(inputs, z)
+        ex = self._aval_cache.get(key)
+        if ex is None:
+            self._misses += 1
+            ex = self._executor(z)
+            self._aval_cache[key] = ex
+        else:
+            self._hits += 1
+        self._last_executor = ex
+        out = ex.run(inputs)
+        return jax.tree_util.tree_unflatten(
+            self._iface.out_treedef,
+            [out[name] for name in self._iface.out_leaves],
+        )
+
+    def lower(self, *args) -> AotLowered:
+        """AOT-lower the full batched computation for these avals (pc only)."""
+        if self.backend != "pc":
+            raise ValueError("AOT lowering requires the 'pc' backend")
+        inputs, z = self._bind(args)
+        return AotLowered(self._executor(z).lower(inputs))
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def last_result(self) -> Optional[pc_vm.VMResult]:
+        """The :class:`pc_vm.VMResult` of the most recent pc-backend call."""
+        return self._last_executor.last_result if self._last_executor else None
+
+    @property
+    def tag_stats(self) -> dict[str, tuple[int, int]]:
+        """tag -> (primitive executions, active member-executions).
+
+        Unified across backends: counters cover the *most recent call only*
+        on every backend; ``{}`` before any call has run (and always for
+        the ``reference`` backend, which keeps no counters).
+        """
+        return self._last_executor.tag_stats if self._last_executor else {}
+
+    @property
+    def utilization(self) -> dict[str, float]:
+        """Per-tag batch utilization of the last run (paper Fig. 6).
+
+        ``utilization[tag] = active / (executions * batch_size)``.  Returns
+        ``{}`` before any call has run on every backend; tags that executed
+        with no active members report ``0.0``.
+        """
+        ex = self._last_executor
+        if ex is None:
+            return {}
+        z = ex.batch_size
+        return {
+            tag: (act / (execs * z) if execs else 0.0)
+            for tag, (execs, act) in ex.tag_stats.items()
+        }
+
+
+# --------------------------------------------------------------------------
+# Interface construction
+# --------------------------------------------------------------------------
+
+
+# The decorator path's out_leaves must match the output names the AST
+# transform generates — share the single definition.
+_ret_names = ast_frontend._ret_names
+
+
+def _bind_in_specs(
+    name: str,
+    params: tuple[str, ...],
+    in_specs: Sequence,
+    declared: Optional[dict[str, jax.ShapeDtypeStruct]] = None,
+) -> tuple[tuple[ir.ArgBinding, ...], dict[str, jax.ShapeDtypeStruct]]:
+    """Map ``in_specs`` entries onto IR parameters in flatten order."""
+    bindings: list[ir.ArgBinding] = []
+    arg_specs: dict[str, jax.ShapeDtypeStruct] = {}
+    idx = 0
+    for entry in in_specs:
+        leaf_specs, treedef, shared = _flatten_spec(entry)
+        names = params[idx : idx + len(leaf_specs)]
+        if len(names) != len(leaf_specs):
+            raise TypeError(
+                f"{name}: in_specs bind {idx + len(leaf_specs)} leaves but "
+                f"the function has only {len(params)} parameters"
+            )
+        for p, spec in zip(names, leaf_specs):
+            if declared is not None and not _specs_eq(spec, declared[p]):
+                raise TypeError(
+                    f"{name}: in_specs leaf for parameter {p!r} is {spec} "
+                    f"but the program declares {declared[p]}"
+                )
+            arg_specs[p] = spec
+        bindings.append(ir.ArgBinding(tuple(names), treedef, shared))
+        idx += len(leaf_specs)
+    if idx != len(params):
+        raise TypeError(
+            f"{name}: in_specs cover {idx} of {len(params)} parameters "
+            f"({params[idx:]} unbound)"
+        )
+    return tuple(bindings), arg_specs
+
+
+def _contains_dict(tree: Any) -> bool:
+    if isinstance(tree, dict):
+        return True
+    if isinstance(tree, (list, tuple)):
+        return any(_contains_dict(x) for x in tree)
+    return False
+
+
+def _bind_out_spec(
+    name: str,
+    outputs: tuple[str, ...],
+    out_spec: Any,
+    declared: Optional[dict[str, jax.ShapeDtypeStruct]] = None,
+):
+    """Resolve the output pytree -> (treedef, IR output names per leaf)."""
+    if out_spec is None:
+        # Default: a dict keyed by the IR output names.
+        tree = {o: o for o in outputs}
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return treedef, tuple(leaves)
+    leaves, treedef = jax.tree_util.tree_flatten(out_spec)
+    if all(isinstance(l, str) for l in leaves):
+        # Name-based restructuring: leaves name IR outputs.
+        for l in leaves:
+            if l not in outputs:
+                raise TypeError(
+                    f"{name}: out_spec names unknown output {l!r} "
+                    f"(have {outputs})"
+                )
+        return treedef, tuple(leaves)
+    # Spec leaves: positional against the declared outputs in flatten order.
+    # Unordered containers would bind in sorted-key order, silently
+    # permuting equal-spec outputs — require name-based string leaves there.
+    if _contains_dict(out_spec):
+        raise TypeError(
+            f"{name}: out_spec dicts with spec leaves are ambiguous "
+            "(dict flatten order is sorted-key, not declaration order); "
+            "use output-name strings as leaves, e.g. "
+            "out_spec={'mean': 'sum_theta'}"
+        )
+    if len(leaves) != len(outputs):
+        raise TypeError(
+            f"{name}: out_spec has {len(leaves)} leaves for "
+            f"{len(outputs)} outputs"
+        )
+    if declared is not None:
+        for o, l in zip(outputs, leaves):
+            spec = _as_spec(l)
+            if not _specs_eq(spec, declared[o]):
+                raise TypeError(
+                    f"{name}: out_spec leaf for output {o!r} is {spec} "
+                    f"but the program declares {declared[o]}"
+                )
+    return treedef, tuple(outputs)
+
+
+# --------------------------------------------------------------------------
+# The decorator / entry point
+# --------------------------------------------------------------------------
+
+
+def autobatch(
+    target: Any = None,
+    *,
+    in_specs: Optional[Sequence] = None,
+    out_spec: Any = None,
+    backend: str = "pc",
+    batch_size: Optional[int] = None,
+    max_depth: int = 32,
+    max_steps: int = 1_000_000,
+    use_kernel: bool = False,
+    collect_stats: bool = True,
+    registry: Optional[ast_frontend.Namespace] = None,
+):
+    """Autobatch a restricted-Python function or an IR program.
+
+    Usable three ways:
+
+    1. As a decorator over restricted Python (``in_specs``/``out_spec``
+       required; each parameter must be a single-leaf spec)::
+
+           @autobatch(in_specs=(Batched(I32),), out_spec=I32)
+           def fib(n): ...
+
+    2. Over a :class:`frontend.ProgramBuilder`, a single
+       :class:`frontend.FunctionBuilder` / :class:`ir.Function`, or a
+       pre-built :class:`ir.Program`.  ``in_specs`` defaults to
+       ``Batched(<declared spec>)`` per parameter; ``out_spec`` defaults to
+       a dict keyed by the IR output names (pass a pytree of output-name
+       strings to restructure, or of specs bound positionally).
+
+    3. Partially applied (``autobatch(backend=..., ...)``) to get a
+       decorator with fixed options.
+
+    ``batch_size=None`` (the default) infers the batch size from the leading
+    axis of the first ``Batched`` leaf on every call; executors are cached
+    per batch size, and the pc backend's lowering is shared across all of
+    them.  All functions registered in the same ``registry`` may call each
+    other, whichever frontend defined them.  Decorated Python functions
+    default to a process-wide namespace; builder programs default to a
+    private one (pass ``registry=`` to share deliberately).
+    """
+    if target is None:
+        return functools.partial(
+            autobatch,
+            in_specs=in_specs,
+            out_spec=out_spec,
+            backend=backend,
+            batch_size=batch_size,
+            max_depth=max_depth,
+            max_steps=max_steps,
+            use_kernel=use_kernel,
+            collect_stats=collect_stats,
+            registry=registry,
+        )
+    if registry is not None:
+        ns = registry
+    elif isinstance(
+        target, (frontend.ProgramBuilder, frontend.FunctionBuilder,
+                 ir.Function)
+    ):
+        # Builder programs default to a private namespace: registering
+        # their function names into the process-wide one could silently
+        # shadow the callees of not-yet-traced decorated functions.  Pass
+        # registry= to share a namespace deliberately (e.g. for AST <->
+        # builder cross-calls).
+        ns = ast_frontend.Namespace()
+    else:
+        ns = DEFAULT_NAMESPACE
+    opts = dict(
+        backend=backend, batch_size=batch_size, max_depth=max_depth,
+        max_steps=max_steps, use_kernel=use_kernel, collect_stats=collect_stats,
+    )
+
+    program: Optional[ir.Program] = None
+    pinned_funcs: dict[str, ir.Function] = {}
+    if isinstance(target, frontend.ProgramBuilder):
+        # Feed the builder's functions through the unified namespace so they
+        # can call (and be called by) AST-defined functions.
+        for func in target.functions.values():
+            pinned_funcs[func.name] = ns.add(func)
+        main_fn = ns._built[target.main]
+        main = target.main
+    elif isinstance(target, (frontend.FunctionBuilder, ir.Function)):
+        main_fn = ns.add(target)
+        main = main_fn.name
+        pinned_funcs[main] = main_fn
+    elif isinstance(target, ir.Program):
+        program = target
+        main = target.main
+        main_fn = target.functions[main]
+    elif callable(target):
+        return _autobatch_python(target, ns, in_specs, out_spec, opts)
+    else:
+        raise TypeError(f"cannot autobatch {target!r}")
+
+    params, outputs = main_fn.params, main_fn.outputs
+    if in_specs is None:
+        in_specs = tuple(Batched(main_fn.param_specs[p]) for p in params)
+    iface_args, arg_specs = _bind_in_specs(
+        main, params, in_specs, declared=main_fn.param_specs
+    )
+    out_treedef, out_leaves = _bind_out_spec(
+        main, outputs, out_spec, declared=main_fn.output_specs
+    )
+    wrapped = AutobatchedFunction(
+        registry=ns, main=main, program=program,
+        iface_args=iface_args, arg_specs=arg_specs,
+        out_treedef=out_treedef, out_leaves=out_leaves, **opts,
+    )
+    wrapped._pinned_funcs = pinned_funcs
+    return wrapped
+
+
+def _autobatch_python(fn, ns, in_specs, out_spec, opts) -> AutobatchedFunction:
+    name = fn.__name__
+    params = tuple(inspect.signature(fn).parameters)
+    if in_specs is None or out_spec is None:
+        raise TypeError(
+            f"@autobatch over Python function {name!r} requires in_specs= "
+            "and out_spec= (output types of recursive functions cannot be "
+            "inferred)"
+        )
+    iface_args, arg_specs = _bind_in_specs(name, params, in_specs)
+    for binding in iface_args:
+        if len(binding.params) != 1:
+            raise TypeError(
+                f"{name}: restricted-Python parameters must be single-leaf "
+                f"specs (argument binding {binding.params} has "
+                f"{len(binding.params)} leaves); use a FunctionBuilder "
+                "program for multi-leaf pytree arguments"
+            )
+    if _contains_dict(out_spec):
+        raise TypeError(
+            f"{name}: out_spec dicts with spec leaves are ambiguous "
+            "(dict flatten order is sorted-key, not declaration order, so "
+            "returned values would bind to sorted keys); use a tuple "
+            "out_spec and restructure at the call site"
+        )
+    out_leaf_specs = [
+        _as_spec(l) for l in jax.tree_util.tree_flatten(out_spec)[0]
+    ]
+    outputs = _ret_names(len(out_leaf_specs))
+    out_treedef = jax.tree_util.tree_flatten(out_spec)[1]
+    param_specs = {p: arg_specs[p] for p in params}
+    ns.define(param_specs=param_specs, output_specs=out_leaf_specs)(fn)
+    wrapped = AutobatchedFunction(
+        registry=ns, main=name, program=None,
+        iface_args=iface_args, arg_specs=arg_specs,
+        out_treedef=out_treedef, out_leaves=outputs, **opts,
+    )
+    wrapped._pinned = (fn, param_specs, out_leaf_specs)
+    functools.update_wrapper(wrapped, fn, updated=())
+    return wrapped

@@ -9,6 +9,11 @@ source.  This repo provides two frontends that produce the same Fig-2 IR:
 * :mod:`repro.core.ast_frontend` — a restricted-Python AST transformer in
   the paper's AutoGraph style (see that module).
 
+Both feed the same unified namespace (:class:`repro.core.ast_frontend
+.Namespace`): builder-defined and AST-defined functions can call each other
+in one program, and :func:`repro.core.batching.autobatch` — the public
+decorator-first API — accepts either kind.
+
 Variables are plain strings.  ``prim`` wraps an arbitrary pure per-member
 JAX function; the runtimes batch it automatically.
 """

@@ -83,6 +83,34 @@ class Block:
     label: str = ""
 
 
+@dataclass(frozen=True)
+class ArgBinding:
+    """How one positional pytree argument binds to IR parameters.
+
+    ``params`` are the IR parameter names consumed by the argument's leaves,
+    in pytree flatten order.  ``shared`` arguments carry no batch axis at
+    call time; the caller broadcasts them across the batch.
+    """
+
+    params: tuple[str, ...]
+    treedef: Any
+    shared: bool = False
+
+
+@dataclass(frozen=True)
+class Interface:
+    """Pytree calling convention of a function (recorded by the public API).
+
+    ``args`` maps positional pytree arguments onto flat IR parameters;
+    ``out_treedef``/``out_leaves`` describe how the flat IR outputs are
+    reassembled into the result pytree.
+    """
+
+    args: tuple[ArgBinding, ...]
+    out_treedef: Any
+    out_leaves: tuple[str, ...]
+
+
 @dataclass
 class Function:
     """A function in the source IR.
@@ -91,6 +119,10 @@ class Function:
     *batch member* (no batch dimension).  Output specs must be declared
     because recursive functions cannot have their output types inferred by a
     simple forward pass; everything else is inferred (see typecheck.py).
+
+    ``iface``, when present, records the pytree calling convention the
+    public :mod:`repro.core.batching` API uses to flatten positional pytree
+    arguments into ``params`` and unflatten ``outputs`` into a result tree.
     """
 
     name: str
@@ -101,6 +133,8 @@ class Function:
     output_specs: dict[str, jax.ShapeDtypeStruct] = field(default_factory=dict)
     # Filled by type inference: spec for every local variable.
     var_specs: dict[str, jax.ShapeDtypeStruct] = field(default_factory=dict)
+    # Optional pytree calling convention (see Interface).
+    iface: Optional[Interface] = None
 
     def validate(self) -> None:
         for i, blk in enumerate(self.blocks):

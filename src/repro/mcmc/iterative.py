@@ -234,9 +234,14 @@ def make_chain_fn(target: Target, settings: NutsSettings):
 
 
 def make_batched(target: Target, settings: NutsSettings):
-    """Jitted, vmapped multi-chain iterative NUTS runner (build once)."""
+    """Jitted, vmapped multi-chain iterative NUTS runner (build once).
+
+    Mirrors the autobatched kernel's calling convention: ``theta0`` and
+    ``keys`` carry the chain axis, ``eps`` is a shared scalar
+    (``in_axes=None``, the hand-written analog of ``Shared``).
+    """
     chain = make_chain_fn(target, settings)
-    run = jax.jit(jax.vmap(chain))
+    run = jax.jit(jax.vmap(chain, in_axes=(0, None, 0)))
 
     def batched(theta0, eps, keys):
         theta, s1, s2, grads = run(theta0, eps, keys)
@@ -254,7 +259,7 @@ def run_batched(
     target: Target,
     settings: NutsSettings,
     theta0: jax.Array,  # [Z, dim]
-    eps: jax.Array,  # [Z]
+    eps: jax.Array,  # scalar (shared step size)
     keys: jax.Array,  # [Z, 2] uint32
 ):
     """One-shot convenience wrapper (re-traces per call; benchmarks should

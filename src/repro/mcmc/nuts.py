@@ -15,16 +15,24 @@ this does not affect soundness.
 The leaf integrator primitive is tagged ``"grad"`` so the runtimes report
 gradient-evaluation counts and batch utilization (paper Figs. 5 & 6).
 Each leaf execution costs ``steps_per_leaf + 1`` gradient evaluations.
+
+Public entry point: :func:`make_nuts_kernel` — the decorator-first pytree
+API.  ``kernel(theta0, eps, key)`` takes per-chain ``theta0``/``key`` and a
+``Shared`` scalar step size, and returns the pytree state ``{"theta",
+"sum_theta", "sum_sq"}``; one kernel object serves every chain count
+(compiled executors are cached per batch size over a shared lowering).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import frontend, ir
+from repro.core import batching, frontend, ir
+from repro.core.batching import Batched, Shared
 from repro.core.frontend import spec
 
 from .targets import Target
@@ -303,20 +311,57 @@ def build_nuts_program(
     return pb.build()
 
 
+def make_nuts_kernel(
+    target: Target,
+    settings: NutsSettings = NutsSettings(),
+    *,
+    backend: str = "pc",
+    batch_size: Optional[int] = None,
+    max_steps: int = 1_000_000,
+    use_kernel: bool = False,
+) -> batching.AutobatchedFunction:
+    """The public NUTS entry point, on the decorator-first pytree API.
+
+    Returns a batched callable ``kernel(theta0, eps, key) -> state`` where
+
+    * ``theta0`` is per-chain (``Batched``): ``[chains, dim]`` float32,
+    * ``eps`` is the step size shared by every chain (``Shared``): a scalar,
+    * ``key`` is per-chain (``Batched``): ``[chains, 2]`` uint32,
+
+    and ``state`` is the pytree ``{"theta": [chains, dim], "sum_theta":
+    [chains, dim], "sum_sq": [chains, dim]}`` of final positions and running
+    moments.  With ``batch_size=None`` the chain count is inferred from
+    ``theta0`` on each call; compiled artifacts are cached per batch size
+    (the stack-explicit lowering is shared across all of them).
+    """
+    program = build_nuts_program(target, settings)
+    vec = spec((target.dim,), jnp.float32)
+    return batching.autobatch(
+        program,
+        in_specs=(Batched(vec), Shared(F32), Batched(KEY)),
+        out_spec={"theta": "theta", "sum_theta": "sum_theta", "sum_sq": "sum_sq"},
+        backend=backend,
+        batch_size=batch_size,
+        max_depth=recommended_max_depth(settings),
+        max_steps=max_steps,
+        use_kernel=use_kernel,
+    )
+
+
 def initial_state(
     target: Target, batch_size: int, *, eps: float, seed: int = 0
-) -> dict:
-    """Batched inputs for the ``nuts_chain`` main function."""
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Positional ``(theta0, eps, key)`` arguments for the NUTS kernel.
+
+    ``eps`` is a scalar (a ``Shared`` argument of the kernel); ``theta0``
+    and ``key`` carry the leading chain axis.
+    """
     rng = np.random.default_rng(seed)
     theta0 = 0.1 * rng.normal(size=(batch_size, target.dim)).astype(np.float32)
     keys = jax.vmap(jax.random.PRNGKey)(
         jnp.arange(seed * 100_000, seed * 100_000 + batch_size)
     )
-    return {
-        "theta0": jnp.asarray(theta0),
-        "eps": jnp.full((batch_size,), eps, jnp.float32),
-        "key": keys,
-    }
+    return jnp.asarray(theta0), jnp.float32(eps), keys
 
 
 def recommended_max_depth(settings: NutsSettings) -> int:

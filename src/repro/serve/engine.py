@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, frontend, ir
+from repro.core import batching, frontend, ir
 from repro.core.frontend import spec
 from repro.models.transformer import Model
 
@@ -80,8 +80,13 @@ class GenerationEngine:
             model, cfg.max_context
         )
         self.program = self._build_program()
-        self.batched = api.autobatch(
-            self.program, cfg.lanes, backend=cfg.backend,
+        # The engine program is loop-only, so its inputs are all per-lane
+        # (Batched) by default; outputs restructure into a result pytree.
+        self.batched = batching.autobatch(
+            self.program,
+            out_spec={"tokens": "out", "lengths": "olens"},
+            backend=cfg.backend,
+            batch_size=cfg.lanes,
             max_depth=4,
             max_steps=2_000_000,
         )
@@ -213,15 +218,15 @@ class GenerationEngine:
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.arange(seed, seed + z)
         )
-        out = self.batched({
-            "prompts": jnp.asarray(prompts, jnp.int32),
-            "plens": jnp.asarray(prompt_lens, jnp.int32),
-            "n_req": jnp.asarray(n_req, jnp.int32),
-            "key": keys,
-        })
+        out = self.batched(
+            jnp.asarray(prompts, jnp.int32),
+            jnp.asarray(prompt_lens, jnp.int32),
+            jnp.asarray(n_req, jnp.int32),
+            keys,
+        )
         return {
-            "tokens": np.asarray(out["out"]),
-            "lengths": np.asarray(out["olens"]),
+            "tokens": np.asarray(out["tokens"]),
+            "lengths": np.asarray(out["lengths"]),
             "utilization": self.batched.utilization.get("decode", None),
         }
 

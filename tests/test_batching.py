@@ -1,0 +1,420 @@
+"""Tests for the decorator-first, pytree-native `autobatch` API.
+
+Covers the four tentpole layers: the ``Batched``/``Shared`` argument model
+(with vmap-parity for broadcasting), pytree round-trips on all four
+backends, frontend unification (AST-defined and builder-defined functions
+calling each other in one program), and the execution cache (same-aval
+re-calls hit; new batch sizes share the lowering).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ast_frontend, frontend, ir
+from repro.core.batching import Batched, Shared, autobatch
+from repro.core.frontend import F32, I32, spec
+
+FIB = np.array([0, 1, 1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144], np.int64)
+BACKENDS = ("pc", "local", "local_eager", "reference")
+
+
+@pytest.fixture()
+def reg():
+    return ast_frontend.Namespace()
+
+
+def build_axpy_builder():
+    """r = a*x + y, s = r^2 — a straight-line program with two outputs."""
+    pb = frontend.ProgramBuilder()
+    fb = pb.function(
+        "axpy", ["a", "x", "y"], ["r", "s"],
+        {"a": F32, "x": F32, "y": F32}, {"r": F32, "s": F32},
+    )
+    fb.assign("r", lambda a, x, y: a * x + y, ["a", "x", "y"])
+    fb.assign("s", lambda r: r * r, ["r"])
+    fb.return_()
+    pb.add(fb)
+    return pb
+
+
+class TestDecoratorPath:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_recursive_fib(self, reg, backend):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32,
+                   backend=backend, max_depth=24, registry=reg)
+        def fib(n):
+            if n < 2:
+                return n
+            return fib(n - 1) + fib(n - 2)
+
+        n = np.array([0, 1, 5, 9, 12, 3], np.int32)
+        np.testing.assert_array_equal(np.asarray(fib(n)), FIB[n])
+
+    def test_requires_specs(self, reg):
+        with pytest.raises(TypeError, match="requires in_specs"):
+            @autobatch(registry=reg)
+            def f(n):
+                return n
+
+    def test_multi_output_tuple(self, reg):
+        @autobatch(in_specs=(Batched(I32),), out_spec=(I32, I32),
+                   registry=reg)
+        def divmod7(n):
+            return n // 7, n % 7
+
+        q, r = divmod7(np.array([0, 7, 30], np.int32))
+        np.testing.assert_array_equal(np.asarray(q), [0, 1, 4])
+        np.testing.assert_array_equal(np.asarray(r), [0, 0, 2])
+
+    def test_shared_scalar_argument(self, reg):
+        @autobatch(in_specs=(Batched(I32), Shared(I32)), out_spec=I32,
+                   registry=reg)
+        def addk(n, k):
+            return n + k
+
+        out = addk(np.array([1, 2, 3], np.int32), np.int32(10))
+        np.testing.assert_array_equal(np.asarray(out), [11, 12, 13])
+
+
+class TestPytreeRoundTrip:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_nested_dict_tuple_io(self, reg, backend):
+        """Nested dict/tuple inputs and outputs round-trip on all backends."""
+        pb = frontend.ProgramBuilder()
+        fb = pb.function(
+            "norm2", ["gain", "u", "v", "w"], ["total", "scaled"],
+            {"gain": F32, "u": F32, "v": F32, "w": F32},
+            {"total": F32, "scaled": F32},
+        )
+        fb.assign("total", lambda u, v, w: u + v + w, ["u", "v", "w"])
+        fb.assign("scaled", lambda g, t: g * t, ["gain", "total"])
+        fb.return_()
+        pb.add(fb)
+
+        bf = autobatch(
+            pb,
+            # One shared scalar + one nested (dict-of-tuple/leaf) state arg.
+            in_specs=(Shared(F32), Batched({"pair": (F32, F32), "w": F32})),
+            # Restructured output pytree (name leaves pick IR outputs).
+            out_spec={"sum": "total", "out": {"scaled": "scaled"}},
+            backend=backend, registry=reg,
+        )
+        state = {"pair": (np.array([1., 2.], np.float32),
+                          np.array([3., 4.], np.float32)),
+                 "w": np.array([5., 6.], np.float32)}
+        res = bf(np.float32(2.0), state)
+        assert set(res) == {"sum", "out"}
+        np.testing.assert_allclose(np.asarray(res["sum"]), [9., 12.])
+        np.testing.assert_allclose(
+            np.asarray(res["out"]["scaled"]), [18., 24.]
+        )
+
+    def test_structure_mismatch_raises(self, reg):
+        bf = autobatch(build_axpy_builder(),
+                       in_specs=(Shared(F32), Batched((F32, F32))),
+                       registry=reg)
+        with pytest.raises(TypeError, match="pytree structure"):
+            bf(np.float32(1.0), {"x": np.zeros(2, np.float32),
+                                 "y": np.zeros(2, np.float32)})
+
+    def test_missing_batch_axis_raises(self, reg):
+        bf = autobatch(build_axpy_builder(),
+                       in_specs=(Shared(F32), Batched((F32, F32))),
+                       registry=reg)
+        with pytest.raises(TypeError, match="leading batch axis"):
+            bf(np.float32(1.0), (np.float32(1.0), np.float32(2.0)))
+
+    def test_dict_of_specs_out_spec_rejected(self, reg):
+        """Dicts flatten in sorted-key order, which would silently permute
+        equal-spec outputs — dict out_specs must use name-string leaves."""
+        with pytest.raises(TypeError, match="ambiguous"):
+            autobatch(build_axpy_builder(),
+                      out_spec={"sum": F32, "prod": F32}, registry=reg)
+
+    def test_dict_of_specs_out_spec_rejected_decorator_path(self, reg):
+        with pytest.raises(TypeError, match="ambiguous"):
+            @autobatch(in_specs=(Batched(I32),),
+                       out_spec={"double": I32, "answer": I32}, registry=reg)
+            def f(n):
+                return n * 2, n * 0 + 42
+
+    def test_interface_recorded_on_ir(self, reg):
+        bf = autobatch(build_axpy_builder(),
+                       in_specs=(Shared(F32), Batched((F32, F32))),
+                       registry=reg)
+        bf(np.float32(1.0), (np.ones(3, np.float32), np.ones(3, np.float32)))
+        iface = bf.program.functions["axpy"].iface
+        assert isinstance(iface, ir.Interface)
+        assert iface.args[0].shared and not iface.args[1].shared
+        assert iface.args[1].params == ("x", "y")
+
+
+class TestSharedVmapParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_broadcast_matches_vmap_in_axes_none(self, reg, backend):
+        """``Shared`` == ``jax.vmap(..., in_axes=None)`` of the per-member
+        function run through the reference semantics."""
+        vec = spec((3,), jnp.float32)
+        pb = frontend.ProgramBuilder()
+        fb = pb.function(
+            "affine", ["w", "x", "b"], ["out"],
+            {"w": vec, "x": vec, "b": F32}, {"out": F32},
+        )
+        fb.assign("out", lambda w, x, b: jnp.dot(w, x) + b, ["w", "x", "b"])
+        fb.return_()
+        pb.add(fb)
+
+        bf = autobatch(pb, in_specs=(Shared(vec), Batched(vec), Shared(F32)),
+                       backend=backend, registry=reg)
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=3).astype(np.float32)
+        x = rng.normal(size=(5, 3)).astype(np.float32)
+        b = np.float32(0.5)
+        got = np.asarray(bf(w, x, b)["out"])
+        want = jax.vmap(
+            lambda w, x, b: jnp.dot(w, x) + b, in_axes=(None, 0, None)
+        )(w, x, b)
+        np.testing.assert_allclose(got, np.asarray(want), rtol=1e-6)
+
+    def test_batched_vs_shared_same_values_agree(self, reg):
+        """Tiling a shared value by hand (old convention) must match
+        passing it as ``Shared`` (new convention)."""
+        pb = build_axpy_builder()
+        shared = autobatch(pb, in_specs=(Shared(F32), Batched((F32, F32))),
+                           registry=reg)
+        tiled = autobatch(pb, registry=reg)  # default: everything Batched
+        x = np.array([1., 2., 3.], np.float32)
+        y = np.array([4., 5., 6.], np.float32)
+        a = np.float32(2.0)
+        out_s = shared(a, (x, y))
+        out_t = tiled(np.full(3, a, np.float32), x, y)
+        for k in ("r", "s"):
+            np.testing.assert_allclose(
+                np.asarray(out_s[k]), np.asarray(out_t[k])
+            )
+
+
+class TestFrontendUnification:
+    def test_ast_calls_builder_function(self, reg):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("triple", ["x"], ["out"], {"x": I32}, {"out": I32})
+        fb.assign("out", lambda x: 3 * x, ["x"])
+        fb.return_()
+        pb.add(fb)
+        reg.add(fb)
+
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, registry=reg)
+        def f(n):
+            if n < 0:
+                return triple(0 - n)  # noqa: F821 - resolved in-registry
+            return triple(n) + 1
+
+        out = f(np.array([-2, 0, 4], np.int32))
+        np.testing.assert_array_equal(np.asarray(out), [6, 1, 13])
+
+    def test_builder_calls_ast_function(self, reg):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32,
+                   max_depth=20, registry=reg)
+        def fact(n):
+            if n <= 1:
+                return n * 0 + 1
+            return n * fact(n - 1)
+
+        fb = frontend.FunctionBuilder(
+            "fact_plus", ["n"], ["out"], {"n": I32}, {"out": I32}
+        )
+        fb.call("fact", ["n"], out="t")
+        fb.assign("out", lambda t: t + 1, ["t"])
+        fb.return_()
+        g = autobatch(fb, backend="pc", max_depth=20, registry=reg)
+        out = g(np.array([1, 3, 5], np.int32))
+        np.testing.assert_array_equal(np.asarray(out["out"]), [2, 7, 121])
+
+    def test_same_name_redefinition_does_not_leak(self, reg):
+        """Each wrapper traces the body it decorated, even if a later
+        registration shadowed its name in the shared namespace."""
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, registry=reg)
+        def mangle(n):
+            return n + n
+
+        first = mangle
+
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, registry=reg)
+        def mangle(n):  # noqa: F811 - deliberate shadowing
+            return n * 3
+
+        second = mangle
+        n = np.array([2, 5], np.int32)
+        np.testing.assert_array_equal(np.asarray(first(n)), [4, 10])
+        np.testing.assert_array_equal(np.asarray(second(n)), [6, 15])
+        # Order-independent: tracing second first must not poison first.
+        np.testing.assert_array_equal(np.asarray(first(n)), [4, 10])
+
+    def test_builder_redefinition_does_not_leak(self, reg):
+        """Builder-path wrappers are pinned too: a later same-named builder
+        registration must not replace an earlier wrapper's body."""
+        def build_scale(k):
+            pb = frontend.ProgramBuilder()
+            fb = pb.function("scale", ["x"], ["out"], {"x": I32}, {"out": I32})
+            fb.assign("out", lambda x: k * x, ["x"], name=f"mul{k}")
+            fb.return_()
+            pb.add(fb)
+            return pb
+
+        f2 = autobatch(build_scale(2), registry=reg)
+        f3 = autobatch(build_scale(3), registry=reg)
+        n = np.array([1, 2], np.int32)
+        # f2 first traces *after* f3 registered "scale" — must still be x*2.
+        np.testing.assert_array_equal(np.asarray(f2(n)["out"]), [2, 4])
+        np.testing.assert_array_equal(np.asarray(f3(n)["out"]), [3, 6])
+
+    def test_iface_not_shared_across_wrappers(self, reg):
+        """Two wrappers over one program each record their own calling
+        convention without mutating the other's (or the caller's) IR."""
+        pb = build_axpy_builder()
+        shared = autobatch(pb, in_specs=(Shared(F32), Batched((F32, F32))),
+                           registry=reg)
+        tiled = autobatch(pb, registry=reg)
+        x = np.ones(2, np.float32)
+        shared(np.float32(1.0), (x, x))
+        tiled(x, x, x)
+        assert shared.program.functions["axpy"].iface.args[0].shared
+        assert not tiled.program.functions["axpy"].iface.args[0].shared
+
+    def test_builder_default_namespace_is_private(self):
+        """autobatch(builder) without registry= must not register its
+        function names into the process-wide decorator namespace, where
+        they could shadow the callees of not-yet-traced functions."""
+        from repro.core.batching import DEFAULT_NAMESPACE
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("__private_probe", ["x"], ["out"],
+                         {"x": I32}, {"out": I32})
+        fb.assign("out", lambda x: x, ["x"])
+        fb.return_()
+        pb.add(fb)
+        bf = autobatch(pb)
+        bf(np.array([1], np.int32))
+        assert "__private_probe" not in DEFAULT_NAMESPACE
+
+    def test_trace_prunes_unreachable(self, reg):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, registry=reg)
+        def lonely(n):
+            return n + 1
+
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, registry=reg)
+        def other(n):
+            return n - 1
+
+        assert set(lonely.program.functions) == {"lonely"}
+
+
+class TestExecutionCache:
+    def test_same_avals_hit_no_relowering(self, reg):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32,
+                   max_depth=20, registry=reg)
+        def fib(n):
+            if n < 2:
+                return n
+            return fib(n - 1) + fib(n - 2)
+
+        n = np.array([3, 8, 5, 1], np.int32)
+        fib(n)
+        info1 = fib.cache_info()
+        assert (info1.misses, info1.hits) == (1, 0)
+        assert info1.lowerings == 1 and info1.traces == 1
+        fib(n)  # identical avals: must be a pure cache hit
+        info2 = fib.cache_info()
+        assert (info2.misses, info2.hits) == (1, 1)
+        assert info2.lowerings == 1 and info2.traces == 1  # no re-lowering
+
+    def test_new_batch_size_shares_lowering(self, reg):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32,
+                   max_depth=20, registry=reg)
+        def fib(n):
+            if n < 2:
+                return n
+            return fib(n - 1) + fib(n - 2)
+
+        fib(np.array([3, 8], np.int32))
+        fib(np.array([3, 8, 5], np.int32))   # new batch size
+        info = fib.cache_info()
+        assert info.misses == 2 and info.entries == 2
+        assert info.lowerings == 1  # the expensive lowering ran once
+
+    def test_fixed_batch_size_validated(self, reg):
+        bf = autobatch(build_axpy_builder(), batch_size=4, registry=reg)
+        with pytest.raises(TypeError, match="batch axis"):
+            bf(np.ones(3, np.float32), np.ones(3, np.float32),
+               np.ones(3, np.float32))
+
+    def test_aot_lower_and_cost_analysis(self, reg):
+        bf = autobatch(build_axpy_builder(), registry=reg)
+        low = bf.lower(np.ones(2, np.float32), np.ones(2, np.float32),
+                       np.ones(2, np.float32))
+        assert "while" in low.as_text()  # the fused VM loop
+        cost = low.cost_analysis()
+        assert isinstance(cost, dict) and cost
+        with pytest.raises(ValueError, match="pc"):
+            autobatch(build_axpy_builder(), backend="local",
+                      registry=reg).lower(np.ones(2, np.float32),
+                                          np.ones(2, np.float32),
+                                          np.ones(2, np.float32))
+
+
+class TestUnifiedIntrospection:
+    @pytest.mark.parametrize("backend", ["pc", "local", "local_eager",
+                                         "reference"])
+    def test_utilization_empty_before_run(self, reg, backend):
+        bf = autobatch(build_axpy_builder(), backend=backend, registry=reg)
+        assert bf.utilization == {}
+        assert bf.tag_stats == {}
+
+    @pytest.mark.parametrize("backend", ["pc", "local"])
+    def test_tag_stats_unified(self, reg, backend):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("tagged", ["x"], ["out"], {"x": F32}, {"out": F32})
+        fb.prim(lambda x: x * 2.0, ["x"], out="out", name="dbl", tag="dbl")
+        fb.return_()
+        pb.add(fb)
+        bf = autobatch(pb, backend=backend, registry=reg)
+        bf(np.ones(4, np.float32))
+        execs, active = bf.tag_stats["dbl"]
+        assert execs == 1 and active == 4
+        assert bf.utilization["dbl"] == pytest.approx(1.0)
+        # Per-run semantics on every backend: a second call must not
+        # accumulate (the local batcher accumulates internally).
+        bf(np.ones(4, np.float32))
+        assert bf.tag_stats["dbl"] == (1, 4)
+
+
+class TestDeprecatedShim:
+    def test_api_autobatch_warns_and_works(self):
+        from repro.core import api
+        pb = build_axpy_builder()
+        with pytest.warns(DeprecationWarning, match="batching.autobatch"):
+            bp = api.autobatch(pb.build(), 2, backend="pc")
+        assert bp.utilization == {}  # unified pre-run semantics
+        out = bp({"a": np.ones(2, np.float32), "x": np.ones(2, np.float32),
+                  "y": np.ones(2, np.float32)})
+        np.testing.assert_allclose(np.asarray(out["r"]), [2., 2.])
+
+    def test_shim_local_utilization_is_last_run_only(self):
+        """The shim's documented 'identical on every backend' semantics:
+        local-backend utilization covers the most recent call, not the
+        cumulative history."""
+        from repro.core import api
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("maybe", ["x"], ["out"], {"x": F32}, {"out": F32})
+        c = fb.prim(lambda x: x > 0, ["x"])
+        fb.copy("x", out="out")
+        with fb.if_(c):
+            fb.prim(lambda x: x * 2.0, ["x"], out="out", name="dbl",
+                    tag="dbl")
+        fb.return_()
+        pb.add(fb)
+        bp = api.BatchedProgram(pb.build(), 4, backend="local")
+        bp({"x": np.ones(4, np.float32)})           # all active: util 1.0
+        assert bp.utilization["dbl"] == pytest.approx(1.0)
+        bp({"x": np.array([1., 1., -1., -1.], np.float32)})  # half active
+        assert bp.utilization["dbl"] == pytest.approx(0.5)   # not 0.75
