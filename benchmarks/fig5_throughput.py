@@ -13,13 +13,23 @@ Arms (matching the paper's, adapted to JAX per DESIGN.md §2):
 * ``iterative``   — hand-rewritten iterative NUTS (vmap+jit), the
                     expert-manual-effort ceiling the paper cites.
 
+The ``pc`` arm expands into one column per ``--schedule`` x ``--fuse``
+combination (e.g. ``--schedule earliest,popular --fuse on,off``), so the
+dispatch-overhead win of superblock fusion and occupancy scheduling is
+*measured in the same run* as the seed baseline rather than asserted.
+
 Throughput = member gradient evaluations per second (leaf executions x
 active members x grads-per-leaf / wall time), best of ``repeats`` warm
 runs, compilation excluded — the paper's methodology.
+
+``--json PATH`` additionally writes the machine-readable records
+(arm x batch -> grads/sec plus schedule/fuse metadata) so the perf
+trajectory is tracked across PRs (see benchmarks/run.py).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
@@ -27,6 +37,15 @@ import jax
 from repro.mcmc import iterative, nuts, targets
 
 from .common import Table, best_of
+
+#: (schedule, fuse) combinations the plain "pc" arm expands into.
+DEFAULT_PC_VARIANTS = (("earliest", True),)
+
+
+def pc_arm_name(schedule: str, fuse: bool, *, solo: bool) -> str:
+    if solo:
+        return "pc"
+    return f"pc[{schedule},{'fuse' if fuse else 'nofuse'}]"
 
 
 def throughput_sweep(
@@ -40,44 +59,75 @@ def throughput_sweep(
     eps: float = 0.02,
     repeats: int = 3,
     arms: tuple = ("pc", "local", "local_eager", "unbatched", "iterative"),
+    pc_variants: tuple = DEFAULT_PC_VARIANTS,
     unbatched_cap: int = 8,
-) -> Table:
+) -> tuple[Table, list[dict]]:
+    """Run the sweep; returns the rendered table and JSON-able records."""
     target = targets.logistic_regression(num_data=num_data, dim=dim)
     settings = nuts.NutsSettings(
         max_tree_depth=max_tree_depth, num_steps=num_steps,
         steps_per_leaf=steps_per_leaf,
     )
     gpl = settings.grads_per_leaf
+
+    # Expand the "pc" arm into one column per (schedule, fuse) variant.
+    solo = len(pc_variants) == 1
+    columns: list[str] = []
+    pc_meta: dict[str, tuple[str, bool]] = {}
+    for arm in arms:
+        if arm == "pc":
+            for sched, fz in pc_variants:
+                name = pc_arm_name(sched, fz, solo=solo)
+                columns.append(name)
+                pc_meta[name] = (sched, fz)
+        else:
+            columns.append(arm)
+
     tab = Table(
         f"Fig 5 — NUTS grad evals/sec "
         f"(logreg n={num_data} d={dim}, {num_steps} steps/chain)",
-        ["batch", *arms],
+        ["batch", *columns],
     )
-    # One kernel per backend arm: the trace and (for pc) the stack-explicit
+    # One kernel per arm: the trace and (for pc) the stack-explicit
     # lowering are built once and shared across every batch size in the
     # sweep — only the per-batch-size executors are (re)compiled.
-    kernels = {
-        arm: nuts.make_nuts_kernel(
-            target, settings, backend=arm, max_steps=500_000
+    kernels = {}
+    for name, (sched, fz) in pc_meta.items():
+        kernels[name] = nuts.make_nuts_kernel(
+            target, settings, backend="pc", max_steps=500_000,
+            schedule=sched, fuse=fz,
         )
-        for arm in arms
-        if arm in ("pc", "local", "local_eager")
-    }
+    for arm in ("local", "local_eager"):
+        if arm in arms:
+            kernels[arm] = nuts.make_nuts_kernel(
+                target, settings, backend=arm, max_steps=500_000
+            )
     counter = None
     if "unbatched" in arms:
         kernels["unbatched"] = nuts.make_nuts_kernel(
             target, settings, backend="reference"
         )
         # Grad counter for the unbatched arm (same trajectories in
-        # expectation): reuse the pc kernel when it is in the sweep anyway.
-        counter = kernels.get("pc") or nuts.make_nuts_kernel(
-            target, settings, max_steps=500_000
-        )
+        # expectation): reuse a pc kernel when one is in the sweep anyway.
+        counter = next(
+            (kernels[n] for n in pc_meta), None
+        ) or nuts.make_nuts_kernel(target, settings, max_steps=500_000)
+
+    records: list[dict] = []
+
+    def record(arm: str, z: int, gps: float, **extra) -> float:
+        rec = {"arm": arm, "batch": z, "grads_per_sec": gps}
+        if arm in pc_meta:
+            sched, fz = pc_meta[arm]
+            rec.update(schedule=sched, fuse=fz)
+        rec.update(extra)
+        records.append(rec)
+        return gps
 
     for z in batch_sizes:
         theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
         row = [z]
-        for arm in arms:
+        for arm in columns:
             if arm == "iterative":
                 run = iterative.make_batched(target, settings)
                 out = run(theta0, eps_arg, keys)
@@ -85,7 +135,7 @@ def throughput_sweep(
                 t = best_of(lambda: jax.block_until_ready(
                     run(theta0, eps_arg, keys)["theta"]
                 ), repeats)
-                row.append(grads / t)
+                row.append(record(arm, z, grads / t))
                 continue
             if arm == "unbatched":
                 if z > unbatched_cap:
@@ -95,15 +145,38 @@ def throughput_sweep(
                 execs, active = counter.tag_stats["grad"]
                 ref = kernels["unbatched"]
                 t = best_of(lambda: ref(theta0, eps_arg, keys), 1)
-                row.append(active * gpl / t)
+                row.append(record(arm, z, active * gpl / t))
                 continue
             kern = kernels[arm]
             kern(theta0, eps_arg, keys)  # warm-up (compile)
             execs, active = kern.tag_stats["grad"]
+            extra = {}
+            if arm in pc_meta:
+                st = kern.scheduler_stats
+                extra = {"vm_steps": st.steps, "num_blocks": st.num_blocks,
+                         "mean_occupancy": st.mean_occupancy}
             t = best_of(lambda: kern(theta0, eps_arg, keys), repeats)
-            row.append(active * gpl / t)
+            row.append(record(arm, z, active * gpl / t, **extra))
         tab.add(*row)
-    return tab
+    return tab, records
+
+
+def parse_pc_variants(schedules: str, fuses: str) -> tuple:
+    scheds = [s.strip() for s in schedules.split(",") if s.strip()]
+    fz_map = {"on": True, "off": False, "true": True, "false": False}
+    fzs = []
+    for f in fuses.split(","):
+        f = f.strip().lower()
+        if f and f not in fz_map:
+            raise SystemExit(f"--fuse values must be on/off, got {f!r}")
+        if f:
+            fzs.append(fz_map[f])
+    if not scheds or not fzs:
+        raise SystemExit(
+            "--schedule and --fuse must each name at least one value "
+            "(e.g. --schedule earliest,popular --fuse on,off)"
+        )
+    return tuple((s, f) for f in fzs for s in scheds)
 
 
 def main(argv=None) -> int:
@@ -113,6 +186,14 @@ def main(argv=None) -> int:
     ap.add_argument("--batches", default=None,
                     help="comma-separated batch sizes")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--schedule", default="earliest",
+                    help="comma list of pc schedules "
+                         "(earliest, popular, sweep)")
+    ap.add_argument("--fuse", default="on",
+                    help="comma list of on/off: superblock fusion settings "
+                         "for the pc arm")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_fig5.json)")
     args = ap.parse_args(argv)
     if args.full:
         kw: dict = dict(num_data=10_000, dim=100, max_tree_depth=10,
@@ -123,8 +204,23 @@ def main(argv=None) -> int:
         batches = [1, 4, 16, 64]
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
-    tab = throughput_sweep(batches, repeats=args.repeats, **kw)
+    pc_variants = parse_pc_variants(args.schedule, args.fuse)
+    tab, records = throughput_sweep(
+        batches, repeats=args.repeats, pc_variants=pc_variants, **kw
+    )
     print(tab.render())
+    if args.json:
+        payload = {
+            "benchmark": "fig5_throughput",
+            "unit": "member grad evals / sec",
+            "config": {"full": bool(args.full), "batches": batches,
+                       "repeats": args.repeats,
+                       "pc_variants": [list(v) for v in pc_variants], **kw},
+            "records": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[wrote {args.json}: {len(records)} records]")
     return 0
 
 

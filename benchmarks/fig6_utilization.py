@@ -7,6 +7,10 @@ synchronize chains on *trajectory* boundaries (its Python recursion pins
 every member to the same call stack), while the PC VM batches gradients
 across trajectory AND recursion-depth boundaries — the paper's headline
 utilization win (~2x at 10 trajectories).
+
+The pc arm expands into one column per ``--schedule`` x ``--fuse``
+combination, so the occupancy effect of the VM scheduler and of
+superblock fusion is visible next to the local-static baseline.
 """
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ import sys
 from repro.mcmc import nuts, targets
 
 from .common import Table
+
+from .fig5_throughput import DEFAULT_PC_VARIANTS, parse_pc_variants, pc_arm_name
 
 
 def utilization_sweep(
@@ -27,28 +33,40 @@ def utilization_sweep(
     max_tree_depth: int = 8,
     steps_per_leaf: int = 4,
     eps: float = 0.1,
+    pc_variants: tuple = DEFAULT_PC_VARIANTS,
 ) -> Table:
     target = targets.correlated_gaussian(dim=dim, rho=rho)
     settings = nuts.NutsSettings(
         max_tree_depth=max_tree_depth, num_steps=num_steps,
         steps_per_leaf=steps_per_leaf,
     )
+    solo = len(pc_variants) == 1
+    pc_cols = [
+        pc_arm_name(sched, fz, solo=solo) for sched, fz in pc_variants
+    ]
     tab = Table(
         f"Fig 6 — batch utilization of gradient evals "
         f"(correlated Gaussian d={dim} rho={rho}, {num_steps} trajectories)",
-        ["batch", "pc", "local_static", "pc/local"],
+        ["batch", *pc_cols, "local_static", f"{pc_cols[0]}/local"],
     )
-    # One kernel per arm across the sweep; the pc lowering is shared and
+    # One kernel per arm across the sweep; each pc lowering is shared and
     # only the per-batch-size executors differ.
-    pc = nuts.make_nuts_kernel(target, settings, backend="pc")
+    pcs = [
+        nuts.make_nuts_kernel(target, settings, backend="pc",
+                              schedule=sched, fuse=fz)
+        for sched, fz in pc_variants
+    ]
     loc = nuts.make_nuts_kernel(target, settings, backend="local")
     for z in batch_sizes:
         theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
-        pc(theta0, eps_arg, keys)
-        u_pc = pc.utilization["grad"]
+        u_pcs = []
+        for pc in pcs:
+            pc(theta0, eps_arg, keys)
+            u_pcs.append(pc.utilization["grad"])
         loc(theta0, eps_arg, keys)
         u_loc = loc.utilization["grad"]
-        tab.add(z, u_pc, u_loc, u_pc / u_loc if u_loc else float("nan"))
+        tab.add(z, *u_pcs, u_loc,
+                u_pcs[0] / u_loc if u_loc else float("nan"))
     return tab
 
 
@@ -57,6 +75,12 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (d=100, batches up to 64)")
     ap.add_argument("--batches", default=None)
+    ap.add_argument("--schedule", default="earliest",
+                    help="comma list of pc schedules "
+                         "(earliest, popular, sweep)")
+    ap.add_argument("--fuse", default="on",
+                    help="comma list of on/off: superblock fusion settings "
+                         "for the pc arm")
     args = ap.parse_args(argv)
     if args.full:
         batches = [1, 2, 4, 8, 16, 32, 64]
@@ -66,7 +90,8 @@ def main(argv=None) -> int:
         kw = dict(dim=16, num_steps=6, max_tree_depth=7)
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
-    print(utilization_sweep(batches, **kw).render())
+    pc_variants = parse_pc_variants(args.schedule, args.fuse)
+    print(utilization_sweep(batches, pc_variants=pc_variants, **kw).render())
     return 0
 
 

@@ -23,19 +23,32 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6,serve,roofline")
+    ap.add_argument("--batches", default=None,
+                    help="comma-separated batch sizes for fig5/fig6")
+    ap.add_argument("--json-out", default="BENCH_fig5.json",
+                    help="path for the machine-readable fig5 results "
+                         "(tracked across PRs); empty string disables")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     def want(name: str) -> bool:
         return only is None or name in only
 
+    common = (["--full"] if args.full else []) + (
+        ["--batches", args.batches] if args.batches else []
+    )
     t0 = time.time()
     if want("fig5"):
         print()
-        fig5_throughput.main(["--full"] if args.full else [])
+        # Measure the fused pc arm against the unfused/earliest seed
+        # baseline in the same run, and persist the records.
+        fig5_args = common + ["--fuse", "on,off"]
+        if args.json_out:
+            fig5_args += ["--json", args.json_out]
+        fig5_throughput.main(fig5_args)
     if want("fig6"):
         print()
-        fig6_utilization.main(["--full"] if args.full else [])
+        fig6_utilization.main(common)
     if want("serve"):
         print()
         serve_bench.main([])

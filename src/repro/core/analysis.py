@@ -106,6 +106,42 @@ class Liveness:
 
 
 # --------------------------------------------------------------------------
+# Lowered-CFG structure (drives the superblock fusion pass in fusion.py)
+# --------------------------------------------------------------------------
+
+
+def lowered_targets(term: "ir.LTerminator") -> tuple[int, ...]:
+    """Every block index a lowered terminator can transfer control to
+    *statically*.  ``LPushJump`` contributes both its callee entry and its
+    return address (the latter is entered dynamically via ``LReturn``);
+    ``LReturn`` itself contributes nothing — its target is on the pc stack.
+    """
+    if isinstance(term, ir.LJump):
+        return (term.target,)
+    if isinstance(term, ir.LBranch):
+        return (term.true, term.false)
+    if isinstance(term, ir.LPushJump):
+        return (term.target, term.ret)
+    return ()
+
+
+def pinned_blocks(lowered: "ir.LoweredProgram") -> frozenset[int]:
+    """Blocks whose *index* is load-bearing and must survive fusion intact:
+    the program entry, every function entry (``LPushJump`` targets), and
+    every return site (``LPushJump.ret`` addresses, entered dynamically by
+    ``LReturn`` popping the pc stack).  Fusion may copy their ops into a
+    predecessor but must never remove or renumber-away these blocks while
+    they are reachable.
+    """
+    pinned = {lowered.entry} | set(lowered.func_entries.values())
+    for blk in lowered.blocks:
+        if isinstance(blk.term, ir.LPushJump):
+            pinned.add(blk.term.target)
+            pinned.add(blk.term.ret)
+    return frozenset(pinned)
+
+
+# --------------------------------------------------------------------------
 # Call graph / recursion structure
 # --------------------------------------------------------------------------
 

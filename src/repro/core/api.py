@@ -36,7 +36,7 @@ from __future__ import annotations
 import warnings
 from typing import Any, Optional
 
-from . import ir, local_static, lowering, pc_vm, reference
+from . import fusion, ir, local_static, lowering, pc_vm, reference
 
 BACKENDS = ("pc", "local", "local_eager", "reference")
 
@@ -51,6 +51,8 @@ class BatchedProgram:
         max_steps: int = 1_000_000,
         use_kernel: bool = False,
         collect_stats: bool = True,
+        schedule: str = "earliest",
+        fuse: bool = False,  # legacy shim keeps the seed's unfused default
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -61,6 +63,8 @@ class BatchedProgram:
         self.last_result: Optional[pc_vm.VMResult] = None
         if backend == "pc":
             self.lowered = lowering.lower(program)
+            if fuse:
+                self.lowered = fusion.fuse(self.lowered)
             self.vm = pc_vm.ProgramCounterVM(
                 self.lowered,
                 pc_vm.VMConfig(
@@ -69,6 +73,7 @@ class BatchedProgram:
                     max_steps=max_steps,
                     use_kernel=use_kernel,
                     collect_block_stats=collect_stats,
+                    schedule=schedule,
                 ),
             )
         elif backend in ("local", "local_eager"):

@@ -58,7 +58,16 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from . import ast_frontend, frontend, ir, local_static, lowering, pc_vm, reference
+from . import (
+    ast_frontend,
+    frontend,
+    fusion,
+    ir,
+    local_static,
+    lowering,
+    pc_vm,
+    reference,
+)
 
 __all__ = [
     "Batched",
@@ -146,6 +155,18 @@ class _PcExecutor:
     def run(self, inputs: dict[str, Any]) -> dict[str, Any]:
         res = self.vm.run(self._qualify(inputs))
         self.last_result = res
+        if res.depth_exceeded is not None:
+            # Deliberate device sync: silently-corrupted members (dropped
+            # out-of-range pushes) must never escape the pytree API.
+            flags = jax.device_get(res.depth_exceeded)
+            if flags.any():
+                raise pc_vm.StackOverflow(
+                    f"pc/variable stack overflow: {int(flags.sum())} of "
+                    f"{self.batch_size} batch members exceeded "
+                    f"max_depth={self.vm.config.max_depth}; their results "
+                    "would be invalid (out-of-range pushes are dropped). "
+                    "Pass a larger max_depth= to autobatch()."
+                )
         return {k.split("/", 1)[1]: v for k, v in res.outputs.items()}
 
     def lower(self, inputs: dict[str, Any]):
@@ -276,13 +297,21 @@ class AutobatchedFunction:
         max_steps: int,
         use_kernel: bool,
         collect_stats: bool,
+        schedule: str,
+        fuse: bool,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if schedule not in pc_vm.SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {pc_vm.SCHEDULES}, got {schedule!r}"
+            )
         self.registry = registry
         self.main = main
         self.backend = backend
         self.batch_size = batch_size
+        self.schedule = schedule
+        self.fuse = fuse
         self._program = program
         self._iface = ir.Interface(
             args=iface_args, out_treedef=out_treedef, out_leaves=out_leaves
@@ -290,7 +319,7 @@ class AutobatchedFunction:
         self._arg_specs = arg_specs
         self._vm_opts = dict(
             max_depth=max_depth, max_steps=max_steps, use_kernel=use_kernel,
-            collect_block_stats=collect_stats,
+            collect_block_stats=collect_stats, schedule=schedule,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
@@ -347,9 +376,17 @@ class AutobatchedFunction:
 
     @property
     def lowered(self) -> ir.LoweredProgram:
-        """The merged stack-explicit program (pc backend; lowered once)."""
+        """The merged stack-explicit program (pc backend; lowered once).
+
+        When ``fuse=True`` (the default) the superblock fusion pass runs
+        as part of this single lowering, so all batch sizes share the
+        fused program.
+        """
         if self._lowered is None:
-            self._lowered = lowering.lower(self.program)
+            low = lowering.lower(self.program)
+            if self.fuse:
+                low = fusion.fuse(low)
+            self._lowered = low
             self._lower_count += 1
         return self._lowered
 
@@ -458,10 +495,14 @@ class AutobatchedFunction:
         # Note: _bind forces every leaf to (z,)+spec.shape / spec.dtype, so
         # today these keys collapse to the batch size; they are kept in
         # full aval form so the cache contract survives future shape- or
-        # dtype-polymorphic specs.
+        # dtype-polymorphic specs.  schedule/fuse are fixed per wrapper but
+        # belong to the key contract: two wrappers over the same program
+        # with different knobs must never share a compiled executor.
         return (
             self.backend,
             z,
+            self.schedule,
+            self.fuse,
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
                 for k, v in sorted(inputs.items())
@@ -504,6 +545,14 @@ class AutobatchedFunction:
     def last_result(self) -> Optional[pc_vm.VMResult]:
         """The :class:`pc_vm.VMResult` of the most recent pc-backend call."""
         return self._last_executor.last_result if self._last_executor else None
+
+    @property
+    def scheduler_stats(self) -> Optional[pc_vm.SchedulerStats]:
+        """Scheduling summary of the most recent pc-backend call: schedule
+        name, fused-or-not, block count, VM steps, mean dispatch occupancy,
+        and the fused-block provenance map.  ``None`` before any pc run."""
+        res = self.last_result
+        return res.sched if res is not None else None
 
     @property
     def tag_stats(self) -> dict[str, tuple[int, int]]:
@@ -650,6 +699,8 @@ def autobatch(
     max_steps: int = 1_000_000,
     use_kernel: bool = False,
     collect_stats: bool = True,
+    schedule: str = "earliest",
+    fuse: bool = True,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -679,6 +730,16 @@ def autobatch(
     other, whichever frontend defined them.  Decorated Python functions
     default to a process-wide namespace; builder programs default to a
     private one (pass ``registry=`` to share deliberately).
+
+    pc-backend performance knobs (ignored by the other backends; both are
+    part of the executor cache key, and both are bit-exact):
+
+    * ``fuse=True`` runs the superblock fusion pass (fusion.py) over the
+      stack-explicit lowering, collapsing straight-line jump chains into
+      single VM dispatch steps;
+    * ``schedule`` picks the VM's next-block policy: ``"earliest"`` (paper
+      Algorithm 2), ``"popular"`` (occupancy argmax) or ``"sweep"`` (every
+      resident block once per loop iteration, no ``lax.switch``).
     """
     if target is None:
         return functools.partial(
@@ -691,6 +752,8 @@ def autobatch(
             max_steps=max_steps,
             use_kernel=use_kernel,
             collect_stats=collect_stats,
+            schedule=schedule,
+            fuse=fuse,
             registry=registry,
         )
     if registry is not None:
@@ -710,6 +773,7 @@ def autobatch(
     opts = dict(
         backend=backend, batch_size=batch_size, max_depth=max_depth,
         max_steps=max_steps, use_kernel=use_kernel, collect_stats=collect_stats,
+        schedule=schedule, fuse=fuse,
     )
 
     program: Optional[ir.Program] = None

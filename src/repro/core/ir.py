@@ -270,6 +270,10 @@ class LoweredProgram:
     stack_vars: frozenset[str]  # vars that need a stack (paper opt. iii)
     temp_vars: frozenset[str]  # block-local temporaries (paper opt. ii)
     func_entries: dict[str, int]  # function name -> entry block index
+    # Superblock-fusion provenance (fusion.py): new block index -> the
+    # original (pre-fusion) block indices whose ops it concatenates, in
+    # execution order.  ``None`` when the program was never fused.
+    fused_from: Optional[dict[int, tuple[int, ...]]] = None
 
     @property
     def exit_index(self) -> int:

@@ -138,11 +138,15 @@ def lower(program: ir.Program) -> ir.LoweredProgram:
                 )
             elif isinstance(t, ir.Return):
                 cur.term = ir.LReturn()
-            else:  # pragma: no cover
-                raise AssertionError(f"untermainated block {fname}.{bi}")
+            else:
+                raise ValueError(
+                    f"unterminated block {fname}.{bi} "
+                    f"({blk.label or 'unlabeled'}): terminator {t!r} is not "
+                    "a Jump, Branch or Return"
+                )
 
     _patch_targets(lowered, blockmap, func_entries)
-    _popush_eliminate(lowered)
+    popush_eliminate(lowered)
 
     stack_vars = frozenset(
         op.var
@@ -153,7 +157,7 @@ def lower(program: ir.Program) -> ir.LoweredProgram:
     main = program.functions[program.main]
     main_params = tuple(ir.qualify(program.main, p) for p in main.params)
     main_outputs = tuple(ir.qualify(program.main, o) for o in main.outputs)
-    temp_vars = _find_temporaries(lowered, stack_vars, main_params, main_outputs)
+    temp_vars = find_temporaries(lowered, stack_vars, main_params, main_outputs)
 
     return ir.LoweredProgram(
         blocks=lowered,
@@ -196,7 +200,7 @@ def _patch_targets(lowered, blockmap, func_entries) -> None:
             )
 
 
-def _popush_eliminate(lowered: list[ir.LBlock]) -> None:
+def popush_eliminate(lowered: list[ir.LBlock]) -> None:
     """Paper optimization (v): cancel ``pop v ... push v <- src`` pairs.
 
     Sound when nothing between the pop and the push mentions ``v`` (read or
@@ -234,7 +238,7 @@ def _popush_eliminate(lowered: list[ir.LBlock]) -> None:
                     break
 
 
-def _find_temporaries(
+def find_temporaries(
     lowered, stack_vars, main_params, main_outputs
 ) -> frozenset[str]:
     """Paper optimization (ii): variables that never cross a VM iteration.

@@ -2,9 +2,26 @@
 
 The whole batched program executes as ONE ``jax.lax.while_loop`` whose body
 
-  1. picks the earliest block index any live member's pc-top points at,
+  1. picks the next block index via a pluggable *schedule* (see below),
   2. dispatches to that block's fused body via ``jax.lax.switch``,
   3. masks all state updates to the locally-active members.
+
+Schedules (``VMConfig.schedule``):
+
+* ``"earliest"`` — the paper's Algorithm 1/2 heuristic: the smallest block
+  index any live member's pc-top points at.  Deterministic sweep order;
+  members parked at later blocks wait.
+* ``"popular"``  — the occupancy heuristic of Lao et al. (2020): the block
+  where the most live members currently reside, maximizing SIMD occupancy
+  per dispatch.  Ties break toward the lowest index.
+* ``"sweep"``    — run *every* block once per loop iteration under its own
+  mask, with no ``lax.switch`` at all.  Amortizes dispatch overhead for
+  small (post-fusion) programs when members are spread across many blocks;
+  one loop iteration can advance a member through several blocks.
+
+All schedules are bit-exact with each other and with the reference
+interpreter: every block body masks its updates to the members whose pc-top
+selects it, so per-member semantics are schedule-independent.
 
 Because recursion is materialized into fixed-shape ``[depth, batch, ...]``
 stack arrays, the VM contains no host control flow at all: it jits, lowers
@@ -55,6 +72,18 @@ def _gather_top(stack: Array, ptr: Array) -> Array:
     return stack[jnp.clip(ptr, 0, stack.shape[0] - 1), jnp.arange(z)]
 
 
+SCHEDULES = ("earliest", "popular", "sweep")
+
+
+class StackOverflow(RuntimeError):
+    """A member's pc or variable stack exceeded ``max_depth``.
+
+    Out-of-range pushes are dropped (``mode="drop"``), so overflowing
+    members produce invalid results while other members stay exact; the
+    per-member ``VMResult.depth_exceeded`` flag records who overflowed.
+    """
+
+
 @dataclass(frozen=True)
 class VMConfig:
     batch_size: int
@@ -62,6 +91,26 @@ class VMConfig:
     max_steps: int = 1_000_000
     use_kernel: bool = False  # route stack traffic through Pallas stack_ops
     collect_block_stats: bool = True
+    schedule: str = "earliest"  # one of SCHEDULES
+
+
+@dataclass(frozen=True)
+class SchedulerStats:
+    """Per-run scheduling summary (host-side ints/floats, post-run).
+
+    ``steps``/``mean_occupancy`` require a device sync and are therefore
+    only materialized when ``collect_block_stats=True``; with stats off
+    they are ``None``/``nan`` and the run's result stays async.
+    """
+
+    schedule: str
+    fused: bool  # whether the program went through superblock fusion
+    num_blocks: int
+    steps: Optional[int]  # loop iterations (one sweep each for "sweep")
+    mean_occupancy: float  # active members per dispatch / batch_size
+    # Superblock provenance: fused block index -> original block indices
+    # (None when the program was never fused).
+    fused_from: Optional[dict[int, tuple[int, ...]]]
 
 
 @dataclass
@@ -72,12 +121,19 @@ class VMResult:
     block_exec: Optional[Array]  # [num_blocks] times each block ran
     block_active: Optional[Array]  # [num_blocks] total active members
     tag_stats: dict[str, tuple[int, int]]  # tag -> (execs, active) post-run
+    depth_exceeded: Optional[Array] = None  # [batch] bool: stack overflowed
+    sched: Optional[SchedulerStats] = None
 
 
 class ProgramCounterVM:
     """Compiled batched executor for a :class:`ir.LoweredProgram`."""
 
     def __init__(self, lowered: ir.LoweredProgram, config: VMConfig):
+        if config.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {SCHEDULES}, "
+                f"got {config.schedule!r}"
+            )
         self.lowered = lowered
         self.config = config
         self.num_blocks = len(lowered.blocks)
@@ -132,6 +188,10 @@ class ProgramCounterVM:
             "stacks": stacks,
             "ptrs": ptrs,
             "steps": jnp.zeros((), _I32),
+            # Per-member overflow flag: set when a push would land at or
+            # beyond max_depth (the scatter drops it, invalidating that
+            # member's results).
+            "depth_exceeded": jnp.zeros((z,), jnp.bool_),
         }
         if self.config.collect_block_stats:
             state["block_exec"] = jnp.zeros((self.num_blocks,), _I32)
@@ -146,6 +206,7 @@ class ProgramCounterVM:
         lowered = self.lowered
         temp_vars = lowered.temp_vars
         use_kernel = self.config.use_kernel
+        max_depth = self.config.max_depth
 
         if use_kernel:
             from repro.kernels.stack_ops import ops as _sk
@@ -156,6 +217,7 @@ class ProgramCounterVM:
             tops = dict(state["tops"])
             stacks = dict(state["stacks"])
             ptrs = dict(state["ptrs"])
+            depth_exceeded = state["depth_exceeded"]
             temps: dict[str, Array] = {}
 
             def read(v: str) -> Array:
@@ -189,6 +251,10 @@ class ProgramCounterVM:
                         write(name, val)
                 elif isinstance(op, ir.LPush):
                     old_top = tops[op.var]
+                    depth_exceeded = jnp.logical_or(
+                        depth_exceeded,
+                        jnp.logical_and(mask, ptrs[op.var] >= max_depth),
+                    )
                     if use_kernel:
                         stacks[op.var] = _sk.masked_push(
                             stacks[op.var], ptrs[op.var], old_top, mask
@@ -224,6 +290,9 @@ class ProgramCounterVM:
             elif isinstance(t, ir.LPushJump):
                 # Bury the return address; jump to the callee entry.
                 ret = jnp.full_like(pc_top, t.ret)
+                depth_exceeded = jnp.logical_or(
+                    depth_exceeded, jnp.logical_and(mask, pc_ptr >= max_depth)
+                )
                 pc_stack = _scatter_push(pc_stack, pc_ptr, ret, mask)
                 pc_ptr = pc_ptr + imask
                 pc_top = jnp.where(mask, t.target, pc_top)
@@ -243,6 +312,7 @@ class ProgramCounterVM:
                 tops=tops,
                 stacks=stacks,
                 ptrs=ptrs,
+                depth_exceeded=depth_exceeded,
             )
             return out
 
@@ -252,9 +322,26 @@ class ProgramCounterVM:
     # The VM loop
     # ------------------------------------------------------------------
 
+    def _pick_block(self, state: dict[str, Any]) -> Array:
+        """The schedule's block choice for one dispatch (traced)."""
+        exit_idx = self.lowered.exit_index
+        pc_top = state["pc_top"]
+        live = pc_top < exit_idx
+        if self.config.schedule == "popular":
+            # Occupancy argmax: the block where most live members reside.
+            counts = (
+                jnp.zeros((self.num_blocks,), _I32)
+                .at[jnp.where(live, pc_top, self.num_blocks)]
+                .add(1, mode="drop")
+            )
+            return jnp.argmax(counts).astype(_I32)
+        # Earliest-block heuristic (Algorithm 1/2's block choice).
+        return jnp.min(jnp.where(live, pc_top, exit_idx)).astype(_I32)
+
     def _run(self, inputs: dict[str, Array]) -> dict[str, Any]:
         lp = self.lowered
         exit_idx = lp.exit_index
+        collect = self.config.collect_block_stats
         state = self.init_state(inputs)
 
         def cond(state):
@@ -263,13 +350,10 @@ class ProgramCounterVM:
                 jnp.any(state["pc_top"] < exit_idx),
             )
 
-        def body(state):
-            pc_top = state["pc_top"]
-            live = pc_top < exit_idx
-            # Earliest-block heuristic (Algorithm 1/2's block choice).
-            i = jnp.min(jnp.where(live, pc_top, exit_idx)).astype(_I32)
-            if self.config.collect_block_stats:
-                active = jnp.sum((pc_top == i).astype(_I32))
+        def body_switch(state):
+            i = self._pick_block(state)
+            if collect:
+                active = jnp.sum((state["pc_top"] == i).astype(_I32))
                 state = dict(state)
                 state["block_exec"] = state["block_exec"].at[i].add(1)
                 state["block_active"] = state["block_active"].at[i].add(active)
@@ -278,6 +362,28 @@ class ProgramCounterVM:
             state["steps"] = state["steps"] + 1
             return state
 
+        def body_sweep(state):
+            # Run every resident block once, in index order, each under its
+            # own mask — no lax.switch at all.  A member can traverse
+            # several (forward) blocks within one sweep.
+            for b, fn in enumerate(self._block_fns):
+                if collect:
+                    active = jnp.sum((state["pc_top"] == b).astype(_I32))
+                    state = dict(state)
+                    # Count a dispatch only when it had resident members,
+                    # so utilization stays comparable across schedules.
+                    state["block_exec"] = (
+                        state["block_exec"].at[b].add((active > 0).astype(_I32))
+                    )
+                    state["block_active"] = (
+                        state["block_active"].at[b].add(active)
+                    )
+                state = fn(state)
+            state = dict(state)
+            state["steps"] = state["steps"] + 1
+            return state
+
+        body = body_sweep if self.config.schedule == "sweep" else body_switch
         return lax.while_loop(cond, body, state)
 
     def run(self, inputs: dict[str, Array]) -> VMResult:
@@ -292,6 +398,8 @@ class ProgramCounterVM:
         block_exec = state.get("block_exec")
         block_active = state.get("block_active")
         tag_stats: dict[str, tuple[int, int]] = {}
+        mean_occ = float("nan")
+        steps = None
         if block_exec is not None:
             be = jax.device_get(block_exec)
             ba = jax.device_get(block_active)
@@ -299,6 +407,20 @@ class ProgramCounterVM:
                 execs = sum(int(be[b]) * m for b, m in entries)
                 active = sum(int(ba[b]) * m for b, m in entries)
                 tag_stats[tag] = (execs, active)
+            dispatches = int(be.sum())
+            if dispatches:
+                mean_occ = float(ba.sum()) / (
+                    dispatches * self.config.batch_size
+                )
+            steps = int(jax.device_get(state["steps"]))
+        sched = SchedulerStats(
+            schedule=self.config.schedule,
+            fused=lp.fused_from is not None,
+            num_blocks=self.num_blocks,
+            steps=steps,
+            mean_occupancy=mean_occ,
+            fused_from=lp.fused_from,
+        )
         return VMResult(
             outputs=outputs,
             steps=state["steps"],
@@ -306,6 +428,8 @@ class ProgramCounterVM:
             block_exec=block_exec,
             block_active=block_active,
             tag_stats=tag_stats,
+            depth_exceeded=state.get("depth_exceeded"),
+            sched=sched,
         )
 
     # ------------------------------------------------------------------
@@ -316,14 +440,19 @@ class ProgramCounterVM:
         return self._jitted.lower(inputs)
 
     def step_fn(self) -> Callable:
-        """One VM step as a standalone jittable function of the state."""
+        """One VM step as a standalone jittable function of the state.
+
+        Honors ``config.schedule``: a single scheduled dispatch for
+        ``earliest``/``popular``, a full masked pass over every block for
+        ``sweep``.
+        """
 
         def step(state):
-            pc_top = state["pc_top"]
-            live = pc_top < self.lowered.exit_index
-            i = jnp.min(
-                jnp.where(live, pc_top, self.lowered.exit_index)
-            ).astype(_I32)
+            if self.config.schedule == "sweep":
+                for fn in self._block_fns:
+                    state = fn(state)
+                return state
+            i = self._pick_block(state)
             return lax.switch(i, self._block_fns, state)
 
         return step

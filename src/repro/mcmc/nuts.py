@@ -319,6 +319,8 @@ def make_nuts_kernel(
     batch_size: Optional[int] = None,
     max_steps: int = 1_000_000,
     use_kernel: bool = False,
+    schedule: str = "earliest",
+    fuse: bool = True,
 ) -> batching.AutobatchedFunction:
     """The public NUTS entry point, on the decorator-first pytree API.
 
@@ -333,6 +335,10 @@ def make_nuts_kernel(
     moments.  With ``batch_size=None`` the chain count is inferred from
     ``theta0`` on each call; compiled artifacts are cached per batch size
     (the stack-explicit lowering is shared across all of them).
+
+    ``schedule`` and ``fuse`` are the pc backend's dispatch knobs (see
+    :mod:`repro.core.pc_vm` / :mod:`repro.core.fusion`); both are bit-exact,
+    so every combination samples identical chains.
     """
     program = build_nuts_program(target, settings)
     vec = spec((target.dim,), jnp.float32)
@@ -345,6 +351,8 @@ def make_nuts_kernel(
         max_depth=recommended_max_depth(settings),
         max_steps=max_steps,
         use_kernel=use_kernel,
+        schedule=schedule,
+        fuse=fuse,
     )
 
 

@@ -126,6 +126,39 @@ def test_backends_agree_on_random_programs(seed, inputs):
         )
 
 
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    inputs=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(-50, 50)),
+        min_size=1,
+        max_size=5,
+    ),
+)
+def test_schedule_fuse_matrix_matches_reference(seed, inputs):
+    """Every schedule x fuse combination of the pc VM is bit-exact against
+    the unbatched reference on random recursive CFG programs (the ISSUE 2
+    superblock-fusion / pluggable-scheduler contract)."""
+    rng = np.random.default_rng(seed)
+    prog = _Gen(rng).build()
+    n = np.array([i[0] for i in inputs], np.int32)
+    x = np.array([i[1] for i in inputs], np.int32)
+    z = len(inputs)
+    ref = api.autobatch(prog, z, backend="reference", max_depth=64)(
+        {"n": n, "x": x}
+    )["out"]
+    for schedule in ("earliest", "popular", "sweep"):
+        for fuse in (False, True):
+            got = api.autobatch(
+                prog, z, backend="pc", max_depth=64, max_steps=200_000,
+                schedule=schedule, fuse=fuse,
+            )({"n": n, "x": x})["out"]
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(ref),
+                err_msg=f"pc[{schedule},fuse={fuse}] != reference",
+            )
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     n=st.lists(st.integers(0, 11), min_size=1, max_size=8),

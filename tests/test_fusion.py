@@ -1,0 +1,247 @@
+"""Superblock fusion + pluggable VM scheduler (ISSUE 2).
+
+Covers: the fusion pass's structure (NUTS glue blocks collapse, provenance
+map), bit-exactness of every schedule x fuse combination, tag_stats
+invariance under fusion, runtime stack-overflow detection, and the lowering
+terminator validation error.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, batching, frontend, fusion, ir, lowering, pc_vm
+from repro.core.frontend import I32
+from repro.mcmc import nuts, targets
+
+from tests.test_core import FIB, build_fib
+
+
+def tiny_nuts():
+    t = targets.isotropic_gaussian(2)
+    s = nuts.NutsSettings(max_tree_depth=3, num_steps=2, steps_per_leaf=2)
+    return t, s
+
+
+def build_deep_recursion():
+    """f(n) = n for n >= 0 via unit-step recursion (depth = n frames)."""
+    pb = frontend.ProgramBuilder()
+    fb = pb.function("depth", ["n"], ["out"], {"n": I32}, {"out": I32})
+    c = fb.prim(lambda n: n <= 0, ["n"])
+    with fb.if_(c):
+        fb.const(0, jnp.int32, out="out")
+        fb.return_()
+    t = fb.prim(lambda n: n - 1, ["n"])
+    fb.call("depth", [t], out="r")
+    fb.assign("out", lambda r: r + 1, ["r"])
+    fb.return_()
+    pb.add(fb)
+    return pb.build()
+
+
+class TestFusionStructure:
+    def test_nuts_glue_blocks_collapse(self):
+        """The acceptance criterion: fused NUTS has strictly fewer blocks
+        (the loop-header hops and if-join glue collapse into superblocks)."""
+        t, s = tiny_nuts()
+        low = lowering.lower(nuts.build_nuts_program(t, s))
+        fused = fusion.fuse(low)
+        assert len(fused.blocks) < len(low.blocks)
+        # Control-relevant structure survives: same functions, same vars.
+        assert set(fused.func_entries) == set(low.func_entries)
+        assert fused.main_params == low.main_params
+        assert fused.main_outputs == low.main_outputs
+
+    def test_provenance_covers_every_original_block(self):
+        t, s = tiny_nuts()
+        low = lowering.lower(nuts.build_nuts_program(t, s))
+        fused = fusion.fuse(low)
+        assert set(fused.fused_from) == set(range(len(fused.blocks)))
+        covered = {src for srcs in fused.fused_from.values() for src in srcs}
+        # Every original block's ops live on in some superblock (absorbed
+        # join blocks are duplicated into their jump predecessors).
+        assert covered == set(range(len(low.blocks)))
+
+    def test_fusion_reruns_block_local_opts(self):
+        """Cross-block temps newly confined to one superblock leave VM
+        state (paper opt. ii re-applied to the fused program)."""
+        t, s = tiny_nuts()
+        low = lowering.lower(nuts.build_nuts_program(t, s))
+        fused = fusion.fuse(low)
+        assert fused.temp_vars > low.temp_vars
+
+    def test_fusion_is_idempotent(self):
+        t, s = tiny_nuts()
+        low = lowering.lower(nuts.build_nuts_program(t, s))
+        once = fusion.fuse(low)
+        twice = fusion.fuse(once)
+        assert len(twice.blocks) == len(once.blocks)
+        # Provenance composes back to *original* indices.
+        assert {
+            s for srcs in twice.fused_from.values() for s in srcs
+        } == set(range(len(low.blocks)))
+
+    def test_vm_steps_decrease_and_outputs_bitwise_equal(self):
+        """Fusion cuts VM dispatch steps; outputs stay bit-exact (the fused
+        program runs the same masked per-member op sequence)."""
+        t, s = tiny_nuts()
+        args = nuts.initial_state(t, 4, eps=0.3, seed=2)
+        plain = nuts.make_nuts_kernel(t, s, max_steps=100_000, fuse=False)
+        fused = nuts.make_nuts_kernel(t, s, max_steps=100_000, fuse=True)
+        out_p = plain(*args)
+        out_f = fused(*args)
+        for k in out_p:
+            np.testing.assert_array_equal(
+                np.asarray(out_p[k]), np.asarray(out_f[k])
+            )
+        assert fused.scheduler_stats.num_blocks < plain.scheduler_stats.num_blocks
+        assert fused.scheduler_stats.steps < plain.scheduler_stats.steps
+        assert fused.scheduler_stats.fused
+        assert not plain.scheduler_stats.fused
+
+
+class TestSchedules:
+    @pytest.mark.parametrize("schedule", ["earliest", "popular", "sweep"])
+    @pytest.mark.parametrize("fuse", [False, True])
+    def test_fib_exact(self, schedule, fuse):
+        n = np.array([0, 1, 5, 9, 12, 3, 7, 2], np.int32)
+        bf = batching.autobatch(
+            build_fib(), max_depth=20, schedule=schedule, fuse=fuse
+        )
+        out = bf(n)
+        np.testing.assert_array_equal(np.asarray(out["out"]), FIB[n])
+
+    def test_sweep_uses_fewer_loop_iterations(self):
+        n = np.array([9, 3, 12, 7], np.int32)
+        early = batching.autobatch(build_fib(), max_depth=20,
+                                   schedule="earliest")
+        sweep = batching.autobatch(build_fib(), max_depth=20,
+                                   schedule="sweep")
+        early(n)
+        sweep(n)
+        assert sweep.scheduler_stats.steps < early.scheduler_stats.steps
+
+    def test_invalid_schedule_rejected(self):
+        with pytest.raises(ValueError, match="schedule"):
+            batching.autobatch(build_fib(), schedule="random")
+        with pytest.raises(ValueError, match="schedule"):
+            pc_vm.ProgramCounterVM(
+                lowering.lower(build_fib()),
+                pc_vm.VMConfig(batch_size=2, schedule="bogus"),
+            )
+
+    def test_schedule_and_fuse_in_cache_key(self):
+        n = np.array([3, 5], np.int32)
+        bf = batching.autobatch(build_fib(), max_depth=20)
+        bf(n)
+        key = bf._aval_key({"n": n}, 2)
+        assert "earliest" in key and True in key
+
+
+class TestTagStatsUnderFusion:
+    def _tagged_fib(self):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("fib", ["n"], ["out"], {"n": I32}, {"out": I32})
+        c = fb.prim(lambda n: n < 2, ["n"], name="lt2")
+        with fb.if_(c):
+            fb.prim(lambda n: n, ["n"], out="out", name="leaf", tag="leaf")
+            fb.return_()
+        t1 = fb.prim(lambda n: n - 1, ["n"])
+        fb.call("fib", [t1], out="a")
+        t2 = fb.prim(lambda n: n - 2, ["n"])
+        fb.call("fib", [t2], out="b")
+        fb.assign("out", lambda a, b: a + b, ["a", "b"])
+        fb.return_()
+        pb.add(fb)
+        return pb.build()
+
+    def test_lockstep_counts_invariant(self):
+        """Identical inputs => members move in lockstep => both execs and
+        active counts are invariant under fusion."""
+        n = np.full(8, 9, np.int32)
+        prog = self._tagged_fib()
+        stats = {}
+        for fuse in (False, True):
+            bf = batching.autobatch(prog, max_depth=20, fuse=fuse)
+            bf(n)
+            stats[fuse] = bf.tag_stats["leaf"]
+        assert stats[False] == stats[True]
+
+    def test_member_active_counts_invariant(self):
+        """Per-member primitive executions are schedule/fusion independent,
+        so the 'active' half of tag_stats is always exactly preserved."""
+        rng = np.random.default_rng(3)
+        n = rng.integers(2, 12, 16).astype(np.int32)
+        prog = self._tagged_fib()
+        actives = set()
+        for fuse in (False, True):
+            for schedule in ("earliest", "popular", "sweep"):
+                bf = batching.autobatch(prog, max_depth=24, fuse=fuse,
+                                        schedule=schedule)
+                bf(n)
+                execs, active = bf.tag_stats["leaf"]
+                assert execs > 0
+                actives.add(active)
+        assert len(actives) == 1
+
+
+class TestDepthOverflowDetection:
+    def test_batching_executor_raises_with_guidance(self):
+        prog = build_deep_recursion()
+        bf = batching.autobatch(prog, max_depth=8, max_steps=5_000)
+        n = np.array([2, 3, 30], np.int32)  # lane 2 needs ~30 frames
+        with pytest.raises(pc_vm.StackOverflow, match="max_depth"):
+            bf(n)
+        flags = np.asarray(bf.last_result.depth_exceeded)
+        np.testing.assert_array_equal(flags, [False, False, True])
+
+    def test_no_false_positives(self):
+        prog = build_deep_recursion()
+        bf = batching.autobatch(prog, max_depth=16, max_steps=5_000)
+        n = np.array([2, 3, 10], np.int32)
+        out = bf(n)
+        np.testing.assert_array_equal(np.asarray(out["out"]), n)
+        assert not np.asarray(bf.last_result.depth_exceeded).any()
+
+    def test_legacy_api_records_flag_without_raising(self):
+        """The deprecated dict API keeps the seed's contained-overflow
+        semantics (shallow lanes exact) but now exposes the flag."""
+        prog = build_deep_recursion()
+        bp = api.autobatch(prog, 3, backend="pc", max_depth=8,
+                           max_steps=5_000)
+        out = bp({"n": np.array([2, 3, 30], np.int32)})
+        assert int(np.asarray(out["out"])[0]) == 2
+        assert int(np.asarray(out["out"])[1]) == 3
+        flags = np.asarray(bp.last_result.depth_exceeded)
+        np.testing.assert_array_equal(flags, [False, False, True])
+
+
+class TestLoweringValidation:
+    def test_unterminated_block_is_value_error_with_label(self):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("f", ["x"], ["out"], {"x": I32}, {"out": I32})
+        fb.copy("x", out="out")
+        fb.return_()
+        pb.add(fb)
+        prog = pb.build()
+        # Corrupt the terminator with an object Program.validate() cannot
+        # classify; lowering must reject it with the offending block label.
+        prog.functions["f"].blocks[0].term = "bogus"
+        with pytest.raises(ValueError, match=r"unterminated block f\.0"):
+            lowering.lower(prog)
+
+
+class TestFusionNoOpPrograms:
+    def test_branch_only_program_unchanged(self):
+        """A CFG with no unconditional jump chains fuses to itself."""
+        low = lowering.lower(build_fib())
+        fused = fusion.fuse(low)
+        assert len(fused.blocks) == len(low.blocks)
+        assert fused.stack_vars == low.stack_vars
+        n = np.array([4, 11, 0], np.int32)
+        vm = pc_vm.ProgramCounterVM(
+            fused, pc_vm.VMConfig(batch_size=3, max_depth=20)
+        )
+        res = vm.run({ir.qualify("fib", "n"): n})
+        np.testing.assert_array_equal(
+            np.asarray(res.outputs[ir.qualify("fib", "out")]), FIB[n]
+        )
