@@ -13,17 +13,24 @@ Arms (matching the paper's, adapted to JAX per DESIGN.md §2):
 * ``iterative``   — hand-rewritten iterative NUTS (vmap+jit), the
                     expert-manual-effort ceiling the paper cites.
 
-The ``pc`` arm expands into one column per ``--schedule`` x ``--fuse``
-combination (e.g. ``--schedule earliest,popular --fuse on,off``), so the
-dispatch-overhead win of superblock fusion and occupancy scheduling is
+The ``pc`` arm expands into one column per ``--schedule`` x ``--fuse`` x
+``--mesh`` combination (e.g. ``--schedule earliest,popular --fuse on,off
+--mesh none,8``), so the dispatch-overhead win of superblock fusion /
+occupancy scheduling and the multi-device scaling of lane sharding are
 *measured in the same run* as the seed baseline rather than asserted.
+
+``--mesh`` values are device counts (``none`` = unsharded single-device);
+on CPU, fake a mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count
+=8``.  With ``--per-device-batch``, ``--batches`` values are *per-device*
+batch sizes: a ``mesh=8`` arm at batch 32 runs 256 total lanes — the
+fixed-work-per-device (weak-scaling) reading of Fig. 5.
 
 Throughput = member gradient evaluations per second (leaf executions x
 active members x grads-per-leaf / wall time), best of ``repeats`` warm
 runs, compilation excluded — the paper's methodology.
 
 ``--json PATH`` additionally writes the machine-readable records
-(arm x batch -> grads/sec plus schedule/fuse metadata) so the perf
+(arm x batch -> grads/sec plus schedule/fuse/mesh metadata) so the perf
 trajectory is tracked across PRs (see benchmarks/run.py).
 """
 from __future__ import annotations
@@ -38,14 +45,18 @@ from repro.mcmc import iterative, nuts, targets
 
 from .common import Table, best_of
 
-#: (schedule, fuse) combinations the plain "pc" arm expands into.
-DEFAULT_PC_VARIANTS = (("earliest", True),)
+#: (schedule, fuse, mesh) combinations the plain "pc" arm expands into
+#: (mesh=None means unsharded single-device execution).
+DEFAULT_PC_VARIANTS = (("earliest", True, None),)
 
 
-def pc_arm_name(schedule: str, fuse: bool, *, solo: bool) -> str:
+def pc_arm_name(schedule: str, fuse: bool, mesh, *, solo: bool) -> str:
     if solo:
         return "pc"
-    return f"pc[{schedule},{'fuse' if fuse else 'nofuse'}]"
+    parts = [schedule, "fuse" if fuse else "nofuse"]
+    if mesh is not None:
+        parts.append(f"mesh{getattr(mesh, 'size', mesh)}")
+    return f"pc[{','.join(parts)}]"
 
 
 def throughput_sweep(
@@ -61,6 +72,7 @@ def throughput_sweep(
     arms: tuple = ("pc", "local", "local_eager", "unbatched", "iterative"),
     pc_variants: tuple = DEFAULT_PC_VARIANTS,
     unbatched_cap: int = 8,
+    per_device_batch: bool = False,
 ) -> tuple[Table, list[dict]]:
     """Run the sweep; returns the rendered table and JSON-able records."""
     target = targets.logistic_regression(num_data=num_data, dim=dim)
@@ -70,32 +82,34 @@ def throughput_sweep(
     )
     gpl = settings.grads_per_leaf
 
-    # Expand the "pc" arm into one column per (schedule, fuse) variant.
+    # Expand the "pc" arm into one column per (schedule, fuse, mesh)
+    # variant.
     solo = len(pc_variants) == 1
     columns: list[str] = []
-    pc_meta: dict[str, tuple[str, bool]] = {}
+    pc_meta: dict[str, tuple[str, bool, object]] = {}
     for arm in arms:
         if arm == "pc":
-            for sched, fz in pc_variants:
-                name = pc_arm_name(sched, fz, solo=solo)
+            for sched, fz, mesh in pc_variants:
+                name = pc_arm_name(sched, fz, mesh, solo=solo)
                 columns.append(name)
-                pc_meta[name] = (sched, fz)
+                pc_meta[name] = (sched, fz, mesh)
         else:
             columns.append(arm)
 
     tab = Table(
         f"Fig 5 — NUTS grad evals/sec "
-        f"(logreg n={num_data} d={dim}, {num_steps} steps/chain)",
+        f"(logreg n={num_data} d={dim}, {num_steps} steps/chain"
+        + (", per-device batch" if per_device_batch else "") + ")",
         ["batch", *columns],
     )
     # One kernel per arm: the trace and (for pc) the stack-explicit
     # lowering are built once and shared across every batch size in the
     # sweep — only the per-batch-size executors are (re)compiled.
     kernels = {}
-    for name, (sched, fz) in pc_meta.items():
+    for name, (sched, fz, mesh) in pc_meta.items():
         kernels[name] = nuts.make_nuts_kernel(
             target, settings, backend="pc", max_steps=500_000,
-            schedule=sched, fuse=fz,
+            schedule=sched, fuse=fz, mesh=mesh,
         )
     for arm in ("local", "local_eager"):
         if arm in arms:
@@ -108,26 +122,52 @@ def throughput_sweep(
             target, settings, backend="reference"
         )
         # Grad counter for the unbatched arm (same trajectories in
-        # expectation): reuse a pc kernel when one is in the sweep anyway.
+        # expectation): reuse an *unsharded* pc kernel when one is in the
+        # sweep anyway (a mesh kernel would reject non-divisible batches).
         counter = next(
-            (kernels[n] for n in pc_meta), None
+            (kernels[n] for n, (_, _, m) in pc_meta.items() if m is None),
+            None,
         ) or nuts.make_nuts_kernel(target, settings, max_steps=500_000)
 
     records: list[dict] = []
 
+    def ndev_of(mesh) -> int:
+        """Device count of a mesh spec (None | int | 1-D Mesh)."""
+        return getattr(mesh, "size", mesh) or 1
+
     def record(arm: str, z: int, gps: float, **extra) -> float:
         rec = {"arm": arm, "batch": z, "grads_per_sec": gps}
         if arm in pc_meta:
-            sched, fz = pc_meta[arm]
-            rec.update(schedule=sched, fuse=fz)
+            sched, fz, mesh = pc_meta[arm]
+            ndev = ndev_of(mesh)
+            rec.update(schedule=sched, fuse=fz, mesh=ndev,
+                       per_device_batch=z // ndev)
         rec.update(extra)
         records.append(rec)
         return gps
 
+    inputs_cache: dict[int, tuple] = {}
+
+    def inputs_for(z: int) -> tuple:
+        if z not in inputs_cache:
+            inputs_cache[z] = nuts.initial_state(target, z, eps=eps, seed=0)
+        return inputs_cache[z]
+
     for z in batch_sizes:
-        theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
         row = [z]
         for arm in columns:
+            # With --per-device-batch, a mesh arm scales its total batch so
+            # every device holds `z` lanes (weak scaling); all other arms
+            # run `z` total.
+            mesh = pc_meta[arm][2] if arm in pc_meta else None
+            ndev = ndev_of(mesh)
+            z_arm = z * ndev if (per_device_batch and mesh is not None) else z
+            if mesh is not None and z_arm % ndev:
+                # Batch doesn't divide across this arm's mesh: nan the cell
+                # (like the unbatched cap) instead of aborting the sweep.
+                row.append(float("nan"))
+                continue
+            theta0, eps_arg, keys = inputs_for(z_arm)
             if arm == "iterative":
                 run = iterative.make_batched(target, settings)
                 out = run(theta0, eps_arg, keys)
@@ -135,17 +175,17 @@ def throughput_sweep(
                 t = best_of(lambda: jax.block_until_ready(
                     run(theta0, eps_arg, keys)["theta"]
                 ), repeats)
-                row.append(record(arm, z, grads / t))
+                row.append(record(arm, z_arm, grads / t))
                 continue
             if arm == "unbatched":
-                if z > unbatched_cap:
+                if z_arm > unbatched_cap:
                     row.append(float("nan"))
                     continue
                 counter(theta0, eps_arg, keys)
                 execs, active = counter.tag_stats["grad"]
                 ref = kernels["unbatched"]
                 t = best_of(lambda: ref(theta0, eps_arg, keys), 1)
-                row.append(record(arm, z, active * gpl / t))
+                row.append(record(arm, z_arm, active * gpl / t))
                 continue
             kern = kernels[arm]
             kern(theta0, eps_arg, keys)  # warm-up (compile)
@@ -154,14 +194,15 @@ def throughput_sweep(
             if arm in pc_meta:
                 st = kern.scheduler_stats
                 extra = {"vm_steps": st.steps, "num_blocks": st.num_blocks,
-                         "mean_occupancy": st.mean_occupancy}
+                         "mean_occupancy": st.mean_occupancy,
+                         "num_devices": st.num_devices}
             t = best_of(lambda: kern(theta0, eps_arg, keys), repeats)
-            row.append(record(arm, z, active * gpl / t, **extra))
+            row.append(record(arm, z_arm, active * gpl / t, **extra))
         tab.add(*row)
     return tab, records
 
 
-def parse_pc_variants(schedules: str, fuses: str) -> tuple:
+def parse_pc_variants(schedules: str, fuses: str, meshes: str = "none") -> tuple:
     scheds = [s.strip() for s in schedules.split(",") if s.strip()]
     fz_map = {"on": True, "off": False, "true": True, "false": False}
     fzs = []
@@ -171,12 +212,26 @@ def parse_pc_variants(schedules: str, fuses: str) -> tuple:
             raise SystemExit(f"--fuse values must be on/off, got {f!r}")
         if f:
             fzs.append(fz_map[f])
-    if not scheds or not fzs:
+    ms = []
+    for m in meshes.split(","):
+        m = m.strip().lower()
+        if not m:
+            continue
+        if m in ("none", "0"):
+            ms.append(None)
+        elif m.isdigit():
+            ms.append(int(m))
+        else:
+            raise SystemExit(
+                f"--mesh values must be device counts or 'none', got {m!r}"
+            )
+    if not scheds or not fzs or not ms:
         raise SystemExit(
-            "--schedule and --fuse must each name at least one value "
-            "(e.g. --schedule earliest,popular --fuse on,off)"
+            "--schedule, --fuse and --mesh must each name at least one "
+            "value (e.g. --schedule earliest,popular --fuse on,off "
+            "--mesh none,8)"
         )
-    return tuple((s, f) for f in fzs for s in scheds)
+    return tuple((s, f, m) for m in ms for f in fzs for s in scheds)
 
 
 def main(argv=None) -> int:
@@ -192,6 +247,14 @@ def main(argv=None) -> int:
     ap.add_argument("--fuse", default="on",
                     help="comma list of on/off: superblock fusion settings "
                          "for the pc arm")
+    ap.add_argument("--mesh", default="none",
+                    help="comma list of lane-sharding device counts for the "
+                         "pc arm ('none' = unsharded; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--per-device-batch", action="store_true",
+                    help="treat --batches as per-device: mesh arms scale "
+                         "their total batch by the device count "
+                         "(weak scaling)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results (BENCH_fig5.json)")
     args = ap.parse_args(argv)
@@ -204,9 +267,10 @@ def main(argv=None) -> int:
         batches = [1, 4, 16, 64]
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
-    pc_variants = parse_pc_variants(args.schedule, args.fuse)
+    pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh)
     tab, records = throughput_sweep(
-        batches, repeats=args.repeats, pc_variants=pc_variants, **kw
+        batches, repeats=args.repeats, pc_variants=pc_variants,
+        per_device_batch=args.per_device_batch, **kw
     )
     print(tab.render())
     if args.json:
@@ -215,6 +279,7 @@ def main(argv=None) -> int:
             "unit": "member grad evals / sec",
             "config": {"full": bool(args.full), "batches": batches,
                        "repeats": args.repeats,
+                       "per_device_batch": bool(args.per_device_batch),
                        "pc_variants": [list(v) for v in pc_variants], **kw},
             "records": records,
         }

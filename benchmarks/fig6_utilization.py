@@ -42,7 +42,8 @@ def utilization_sweep(
     )
     solo = len(pc_variants) == 1
     pc_cols = [
-        pc_arm_name(sched, fz, solo=solo) for sched, fz in pc_variants
+        pc_arm_name(sched, fz, mesh, solo=solo)
+        for sched, fz, mesh in pc_variants
     ]
     tab = Table(
         f"Fig 6 — batch utilization of gradient evals "
@@ -53,14 +54,20 @@ def utilization_sweep(
     # only the per-batch-size executors differ.
     pcs = [
         nuts.make_nuts_kernel(target, settings, backend="pc",
-                              schedule=sched, fuse=fz)
-        for sched, fz in pc_variants
+                              schedule=sched, fuse=fz, mesh=mesh)
+        for sched, fz, mesh in pc_variants
     ]
     loc = nuts.make_nuts_kernel(target, settings, backend="local")
     for z in batch_sizes:
         theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
         u_pcs = []
-        for pc in pcs:
+        for pc, (_, _, mesh) in zip(pcs, pc_variants):
+            ndev = getattr(mesh, "size", mesh) or 1
+            if mesh is not None and z % ndev:
+                # Batch doesn't divide across this arm's mesh: nan the
+                # cell instead of aborting the sweep.
+                u_pcs.append(float("nan"))
+                continue
             pc(theta0, eps_arg, keys)
             u_pcs.append(pc.utilization["grad"])
         loc(theta0, eps_arg, keys)
@@ -81,6 +88,9 @@ def main(argv=None) -> int:
     ap.add_argument("--fuse", default="on",
                     help="comma list of on/off: superblock fusion settings "
                          "for the pc arm")
+    ap.add_argument("--mesh", default="none",
+                    help="comma list of lane-sharding device counts for the "
+                         "pc arm ('none' = unsharded)")
     args = ap.parse_args(argv)
     if args.full:
         batches = [1, 2, 4, 8, 16, 32, 64]
@@ -90,7 +100,7 @@ def main(argv=None) -> int:
         kw = dict(dim=16, num_steps=6, max_tree_depth=7)
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
-    pc_variants = parse_pc_variants(args.schedule, args.fuse)
+    pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh)
     print(utilization_sweep(batches, pc_variants=pc_variants, **kw).render())
     return 0
 

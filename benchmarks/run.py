@@ -25,6 +25,13 @@ def main(argv=None) -> int:
                     help="comma list: fig5,fig6,serve,roofline")
     ap.add_argument("--batches", default=None,
                     help="comma-separated batch sizes for fig5/fig6")
+    ap.add_argument("--mesh", default=None,
+                    help="comma list of lane-sharding device counts for the "
+                         "fig5/serve pc arms (e.g. 'none,8'; requires that "
+                         "many visible devices)")
+    ap.add_argument("--per-device-batch", action="store_true",
+                    help="fig5: treat --batches as per-device (mesh arms "
+                         "scale total batch by device count)")
     ap.add_argument("--json-out", default="BENCH_fig5.json",
                     help="path for the machine-readable fig5 results "
                          "(tracked across PRs); empty string disables")
@@ -43,6 +50,10 @@ def main(argv=None) -> int:
         # Measure the fused pc arm against the unfused/earliest seed
         # baseline in the same run, and persist the records.
         fig5_args = common + ["--fuse", "on,off"]
+        if args.mesh:
+            fig5_args += ["--mesh", args.mesh]
+            if args.per_device_batch:
+                fig5_args += ["--per-device-batch"]
         if args.json_out:
             fig5_args += ["--json", args.json_out]
         fig5_throughput.main(fig5_args)
@@ -51,7 +62,14 @@ def main(argv=None) -> int:
         fig6_utilization.main(common)
     if want("serve"):
         print()
-        serve_bench.main([])
+        serve_args = []
+        if args.mesh:
+            # serve_bench takes a single device count: use the largest.
+            counts = [m for m in args.mesh.split(",")
+                      if m.strip().lower() not in ("none", "0")]
+            if counts:
+                serve_args = ["--mesh", max(counts, key=int)]
+        serve_bench.main(serve_args)
     if want("roofline"):
         print()
         roofline.main([])

@@ -18,20 +18,29 @@ from .common import Table
 
 
 def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
-                prompt_len: int = 8, requests_per_lane: int = 2) -> Table:
+                prompt_len: int = 8, requests_per_lane: int = 2,
+                mesh=None) -> Table:
     cfg = configs.get_smoke_config("smollm-135m")
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     tab = Table(
-        "Serve engine — generated tokens/sec (VM engine vs sequential)",
-        ["lanes", "vm_tok_s", "seq_tok_s", "speedup", "utilization"],
+        "Serve engine — generated tokens/sec (VM engine vs sequential"
+        + (f", lanes sharded over {mesh} devices" if mesh else "") + ")",
+        ["lanes", "mesh", "vm_tok_s", "seq_tok_s", "speedup", "utilization"],
     )
+    nan = float("nan")
     rng = np.random.default_rng(0)
     for lanes in lane_counts:
+        if mesh and lanes % mesh:
+            # Lanes must divide across the mesh: keep the row (as nans)
+            # so the gap is visible, matching fig5/fig6.
+            tab.add(lanes, mesh, nan, nan, nan, nan)
+            continue
         ecfg = EngineConfig(
             lanes=lanes, max_context=prompt_len + max_new + 2,
             max_prompt_len=prompt_len, max_new_tokens=max_new,
             requests_per_lane=requests_per_lane, eos_id=0, backend="pc",
+            mesh=mesh,
         )
         eng = GenerationEngine(model, params, ecfg)
         prompts = rng.integers(
@@ -48,7 +57,7 @@ def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
         t0 = time.perf_counter()
         ref = eng.reference_generate(prompts, plens)
         t_seq = time.perf_counter() - t0
-        tab.add(lanes, n_tok / t_vm, n_tok / t_seq, t_seq / t_vm,
+        tab.add(lanes, mesh or 1, n_tok / t_vm, n_tok / t_seq, t_seq / t_vm,
                 round(res["utilization"] or 0.0, 3))
     return tab
 
@@ -56,9 +65,13 @@ def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--lanes", default="2,8")
+    ap.add_argument("--mesh", default="none",
+                    help="shard lanes over this many devices ('none' = "
+                         "unsharded; lanes must divide across the mesh)")
     args = ap.parse_args(argv)
     lanes = [int(x) for x in args.lanes.split(",")]
-    print(serve_sweep(lanes).render())
+    mesh = None if args.mesh.lower() in ("none", "0") else int(args.mesh)
+    print(serve_sweep(lanes, mesh=mesh).render())
     return 0
 
 

@@ -53,6 +53,7 @@ class BatchedProgram:
         collect_stats: bool = True,
         schedule: str = "earliest",
         fuse: bool = False,  # legacy shim keeps the seed's unfused default
+        mesh=None,  # lane sharding: None | device count | 1-D Mesh
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -74,6 +75,7 @@ class BatchedProgram:
                     use_kernel=use_kernel,
                     collect_block_stats=collect_stats,
                     schedule=schedule,
+                    mesh=mesh,
                 ),
             )
         elif backend in ("local", "local_eager"):
@@ -153,7 +155,14 @@ def autobatch(
     """Deprecated: use :func:`repro.core.batching.autobatch` instead.
 
     Kept as a thin shim over :class:`BatchedProgram` for callers still on
-    the dict-of-names calling convention.
+    the dict-of-names calling convention.  Semantics match the pytree API
+    with two legacy differences: ``fuse`` defaults to ``False`` (the seed's
+    unfused lowering), and stack overflow is *contained* rather than
+    raised — overflowed members return invalid results, flagged per member
+    in ``last_result.depth_exceeded``, while other members stay exact.
+    The pc knobs (``schedule``, ``fuse``, ``use_kernel``, ``mesh``) pass
+    through unchanged; ``utilization``/``tag_stats`` cover the most recent
+    call only, identically on every backend (``{}`` before any run).
     """
     warnings.warn(
         "repro.core.api.autobatch is deprecated; use the pytree-native "

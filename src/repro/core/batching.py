@@ -37,7 +37,7 @@ Execution cache
 Tracing (frontend -> IR) happens once per decorated function; the pc
 backend's stack-explicit lowering happens once per *program*; per-batch-size
 executors and per-aval compiled artifacts are memoized under a
-``(backend, batch_size, input avals)`` key.  ``cache_info()`` exposes the
+``(backend, batch_size, schedule, fuse, mesh, input avals)`` key.  ``cache_info()`` exposes the
 counters so callers (and tests) can prove that a repeat call at the same
 avals performs no re-trace, no re-lower, and no re-compile, and that a call
 at a *new* batch size reuses the lowering.
@@ -299,6 +299,7 @@ class AutobatchedFunction:
         collect_stats: bool,
         schedule: str,
         fuse: bool,
+        mesh: Any = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -312,6 +313,10 @@ class AutobatchedFunction:
         self.batch_size = batch_size
         self.schedule = schedule
         self.fuse = fuse
+        self.mesh = mesh
+        # Resolved lazily (resolving may initialize the jax backend, which
+        # a decorator at module import time must not do).
+        self._mesh_key_cache: Optional[tuple] = None
         self._program = program
         self._iface = ir.Interface(
             args=iface_args, out_treedef=out_treedef, out_leaves=out_leaves
@@ -319,7 +324,7 @@ class AutobatchedFunction:
         self._arg_specs = arg_specs
         self._vm_opts = dict(
             max_depth=max_depth, max_steps=max_steps, use_kernel=use_kernel,
-            collect_block_stats=collect_stats, schedule=schedule,
+            collect_block_stats=collect_stats, schedule=schedule, mesh=mesh,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
@@ -491,18 +496,32 @@ class AutobatchedFunction:
                 inputs[name] = x
         return inputs, z
 
+    def _mesh_key(self) -> Optional[tuple]:
+        """Hashable mesh identity (resolved once, at first call time).
+
+        Only the pc backend shards; for the others mesh is ignored
+        entirely (like schedule/fuse) and never resolved against the
+        device set.
+        """
+        if self.backend != "pc":
+            return None
+        if self.mesh is not None and self._mesh_key_cache is None:
+            self._mesh_key_cache = pc_vm.mesh_cache_key(self.mesh)
+        return self._mesh_key_cache
+
     def _aval_key(self, inputs: dict[str, jax.Array], z: int) -> tuple:
         # Note: _bind forces every leaf to (z,)+spec.shape / spec.dtype, so
         # today these keys collapse to the batch size; they are kept in
         # full aval form so the cache contract survives future shape- or
-        # dtype-polymorphic specs.  schedule/fuse are fixed per wrapper but
-        # belong to the key contract: two wrappers over the same program
+        # dtype-polymorphic specs.  schedule/fuse/mesh are fixed per wrapper
+        # but belong to the key contract: two wrappers over the same program
         # with different knobs must never share a compiled executor.
         return (
             self.backend,
             z,
             self.schedule,
             self.fuse,
+            self._mesh_key(),
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
                 for k, v in sorted(inputs.items())
@@ -701,6 +720,7 @@ def autobatch(
     collect_stats: bool = True,
     schedule: str = "earliest",
     fuse: bool = True,
+    mesh: Any = None,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -731,15 +751,19 @@ def autobatch(
     default to a process-wide namespace; builder programs default to a
     private one (pass ``registry=`` to share deliberately).
 
-    pc-backend performance knobs (ignored by the other backends; both are
-    part of the executor cache key, and both are bit-exact):
+    pc-backend performance knobs (ignored by the other backends; all are
+    part of the executor cache key, and all are bit-exact):
 
     * ``fuse=True`` runs the superblock fusion pass (fusion.py) over the
       stack-explicit lowering, collapsing straight-line jump chains into
       single VM dispatch steps;
     * ``schedule`` picks the VM's next-block policy: ``"earliest"`` (paper
       Algorithm 2), ``"popular"`` (occupancy argmax) or ``"sweep"`` (every
-      resident block once per loop iteration, no ``lax.switch``).
+      resident block once per loop iteration, no ``lax.switch``);
+    * ``mesh`` shards the batch-lane axis of every VM state array across
+      devices (``None`` = single device, an int device count, or a 1-D
+      ``jax.sharding.Mesh``), compiling the whole program as one SPMD
+      ``lax.while_loop``; the batch size must divide across the mesh.
     """
     if target is None:
         return functools.partial(
@@ -754,6 +778,7 @@ def autobatch(
             collect_stats=collect_stats,
             schedule=schedule,
             fuse=fuse,
+            mesh=mesh,
             registry=registry,
         )
     if registry is not None:
@@ -773,7 +798,7 @@ def autobatch(
     opts = dict(
         backend=backend, batch_size=batch_size, max_depth=max_depth,
         max_steps=max_steps, use_kernel=use_kernel, collect_stats=collect_stats,
-        schedule=schedule, fuse=fuse,
+        schedule=schedule, fuse=fuse, mesh=mesh,
     )
 
     program: Optional[ir.Program] = None

@@ -34,6 +34,27 @@ the TPU-friendly choice (see DESIGN.md §2).  Stack traffic — the only
 gathers/scatters — is confined to pushes and pops thanks to the top-of-stack
 cache (paper opt. iv), and can be routed through the Pallas ``stack_ops``
 kernel on TPU (``use_kernel=True``).
+
+Multi-device lane sharding (``VMConfig.mesh``):
+
+Every piece of VM state is *lane-major* — ``[batch, ...]`` tops/pointers/
+masks and ``[depth, batch, ...]`` stacks — and every block body is
+elementwise per lane, so the whole step is embarrassingly data-parallel.
+With ``mesh=N`` (or an explicit 1-D ``jax.sharding.Mesh``) the VM lays out
+each state array with a ``NamedSharding`` that splits the lane axis across
+the mesh, and the single ``lax.while_loop`` compiles as one SPMD program.
+The only cross-device traffic per iteration is scalar all-reduces:
+
+* the liveness check in ``cond`` (``any(pc_top < exit)`` — one bool),
+* the schedule's block choice in ``_pick_block`` (``min``/``argmax`` over
+  per-lane pc values — one i32),
+* with ``collect_block_stats=True``, the per-dispatch occupancy count
+  (one i32; disable stats to drop it).
+
+All schedules stay bit-exact under sharding: block bodies are per-lane, and
+the reductions above are integer min/sum/argmax, which are associative and
+placement-independent.  The loop-carried state is donated on accelerator
+backends so steady-state memory is flat at one copy of the VM state.
 """
 from __future__ import annotations
 
@@ -43,7 +64,9 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from . import ir
 
@@ -74,6 +97,51 @@ def _gather_top(stack: Array, ptr: Array) -> Array:
 
 SCHEDULES = ("earliest", "popular", "sweep")
 
+#: Mesh axis name the lane (batch) dimension shards over.
+LANE_AXIS = "lanes"
+
+
+def resolve_mesh(mesh: Any) -> Optional[Mesh]:
+    """Normalize a ``VMConfig.mesh`` value to a 1-D ``jax.sharding.Mesh``.
+
+    Accepts ``None`` (no sharding), an integer device count (the first
+    ``mesh`` entries of ``jax.devices()`` under the :data:`LANE_AXIS` axis),
+    or an explicit 1-D ``Mesh`` whose single axis is the lane axis.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                "pc VM lane sharding needs a 1-D mesh (one axis over the "
+                f"batch lanes); got axes {mesh.axis_names}"
+            )
+        return mesh
+    n = int(mesh)
+    if n < 1:
+        raise ValueError(f"mesh device count must be >= 1, got {n}")
+    devices = jax.devices()
+    if n > len(devices):
+        raise ValueError(
+            f"mesh={n} needs {n} devices but only {len(devices)} are "
+            "visible (on CPU, set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N to fake a mesh)"
+        )
+    return Mesh(np.asarray(devices[:n]), (LANE_AXIS,))
+
+
+def mesh_cache_key(mesh: Any) -> Optional[tuple]:
+    """A hashable identity for a mesh spec, for compilation-cache keys.
+
+    ``None`` stays ``None`` without touching the jax backend; everything
+    else resolves to ``(axis_name, device ids)`` so that an int spec and
+    the equivalent explicit ``Mesh`` share compiled executors.
+    """
+    m = resolve_mesh(mesh)
+    if m is None:
+        return None
+    return (m.axis_names, tuple(d.id for d in m.devices.flat))
+
 
 class StackOverflow(RuntimeError):
     """A member's pc or variable stack exceeded ``max_depth``.
@@ -92,6 +160,9 @@ class VMConfig:
     use_kernel: bool = False  # route stack traffic through Pallas stack_ops
     collect_block_stats: bool = True
     schedule: str = "earliest"  # one of SCHEDULES
+    # Lane sharding: None (single device), an int device count, or a 1-D
+    # jax.sharding.Mesh.  batch_size must divide evenly across the mesh.
+    mesh: Any = None
 
 
 @dataclass(frozen=True)
@@ -111,6 +182,8 @@ class SchedulerStats:
     # Superblock provenance: fused block index -> original block indices
     # (None when the program was never fused).
     fused_from: Optional[dict[int, tuple[int, ...]]]
+    # Devices the lane axis was sharded over (1 = unsharded).
+    num_devices: int = 1
 
 
 @dataclass
@@ -137,6 +210,30 @@ class ProgramCounterVM:
         self.lowered = lowered
         self.config = config
         self.num_blocks = len(lowered.blocks)
+        self.mesh = resolve_mesh(config.mesh)
+        self._lane_sharding = None
+        self._stack_sharding = None
+        self._replicated = None
+        if self.mesh is not None:
+            n = self.mesh.size
+            if config.batch_size % n:
+                raise ValueError(
+                    f"batch_size={config.batch_size} does not divide across "
+                    f"the {n}-device mesh; pick a batch that is a multiple "
+                    f"of {n}"
+                )
+            if config.use_kernel:
+                raise ValueError(
+                    "use_kernel=True (Pallas stack_ops) is not supported "
+                    "together with mesh sharding; the XLA scatter/gather "
+                    "path shards, the hand-written kernel does not"
+                )
+            axis = self.mesh.axis_names[0]
+            self._lane_sharding = NamedSharding(self.mesh, PartitionSpec(axis))
+            self._stack_sharding = NamedSharding(
+                self.mesh, PartitionSpec(None, axis)
+            )
+            self._replicated = NamedSharding(self.mesh, PartitionSpec())
         self._state_vars = [
             v
             for v in sorted(lowered.var_specs)
@@ -152,7 +249,16 @@ class ProgramCounterVM:
                 if isinstance(op, ir.LPrim) and op.tag:
                     entry = self._tag_blocks.setdefault(op.tag, [])
                     entry.append((i, 1))
+        # One-program path (kept for .lower()/cost_analysis), plus a
+        # two-stage path for run(): init and loop are jitted separately so
+        # the loop-carried state pytree can be donated — steady-state
+        # memory stays flat at one copy of the VM state.  XLA's CPU client
+        # does not implement donation, so only donate on accelerators
+        # (avoids a warning per compile).
         self._jitted = jax.jit(self._run)
+        self._donate = jax.default_backend() != "cpu"
+        self._jitted_start = jax.jit(self._start)
+        self._jitted_loop = jax.jit(self._loop, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     # State construction
@@ -197,6 +303,35 @@ class ProgramCounterVM:
             state["block_exec"] = jnp.zeros((self.num_blocks,), _I32)
             state["block_active"] = jnp.zeros((self.num_blocks,), _I32)
         return state
+
+    def _shard_state(self, state: dict[str, Any]) -> dict[str, Any]:
+        """Pin the lane layout of every state array (no-op without a mesh).
+
+        Lane-major arrays (``[batch, ...]`` tops/pointers/masks) shard their
+        leading axis over :data:`LANE_AXIS`; ``[depth, batch, ...]`` stacks
+        shard axis 1; scalars and the ``[num_blocks]`` stat counters are
+        replicated.  Constraining the initial carry is enough — GSPMD
+        propagates the layout through the whole ``lax.while_loop``.
+        """
+        if self.mesh is None:
+            return state
+        wsc = jax.lax.with_sharding_constraint
+        lane, stack, repl = (
+            self._lane_sharding, self._stack_sharding, self._replicated
+        )
+        out = dict(state)
+        out["pc_top"] = wsc(state["pc_top"], lane)
+        out["pc_stack"] = wsc(state["pc_stack"], stack)
+        out["pc_ptr"] = wsc(state["pc_ptr"], lane)
+        out["depth_exceeded"] = wsc(state["depth_exceeded"], lane)
+        out["tops"] = {v: wsc(x, lane) for v, x in state["tops"].items()}
+        out["stacks"] = {v: wsc(x, stack) for v, x in state["stacks"].items()}
+        out["ptrs"] = {v: wsc(x, lane) for v, x in state["ptrs"].items()}
+        out["steps"] = wsc(state["steps"], repl)
+        if "block_exec" in state:
+            out["block_exec"] = wsc(state["block_exec"], repl)
+            out["block_active"] = wsc(state["block_active"], repl)
+        return out
 
     # ------------------------------------------------------------------
     # Block body compilation
@@ -323,12 +458,21 @@ class ProgramCounterVM:
     # ------------------------------------------------------------------
 
     def _pick_block(self, state: dict[str, Any]) -> Array:
-        """The schedule's block choice for one dispatch (traced)."""
+        """The schedule's block choice for one dispatch (traced).
+
+        With a mesh this is one of the two global reductions in the whole
+        program (the other is liveness in ``cond``): a min/argmax over the
+        per-lane pc values that all-reduces ONE i32 scalar per iteration —
+        there is deliberately no lane-shaped cross-device traffic here.
+        """
         exit_idx = self.lowered.exit_index
         pc_top = state["pc_top"]
         live = pc_top < exit_idx
         if self.config.schedule == "popular":
             # Occupancy argmax: the block where most live members reside.
+            # The [num_blocks] histogram is replicated; the scatter-add over
+            # lanes reduces to a per-block integer sum (associative, so the
+            # result is identical however lanes are placed).
             counts = (
                 jnp.zeros((self.num_blocks,), _I32)
                 .at[jnp.where(live, pc_top, self.num_blocks)]
@@ -338,13 +482,20 @@ class ProgramCounterVM:
         # Earliest-block heuristic (Algorithm 1/2's block choice).
         return jnp.min(jnp.where(live, pc_top, exit_idx)).astype(_I32)
 
+    def _start(self, inputs: dict[str, Array]) -> dict[str, Any]:
+        """Inputs -> initial VM state, with the lane layout pinned."""
+        return self._shard_state(self.init_state(inputs))
+
     def _run(self, inputs: dict[str, Array]) -> dict[str, Any]:
-        lp = self.lowered
-        exit_idx = lp.exit_index
+        return self._loop(self._start(inputs))
+
+    def _loop(self, state: dict[str, Any]) -> dict[str, Any]:
+        exit_idx = self.lowered.exit_index
         collect = self.config.collect_block_stats
-        state = self.init_state(inputs)
 
         def cond(state):
+            # Global liveness: ``any`` over the lane axis — a single bool
+            # all-reduce per iteration under a mesh.
             return jnp.logical_and(
                 state["steps"] < self.config.max_steps,
                 jnp.any(state["pc_top"] < exit_idx),
@@ -387,8 +538,18 @@ class ProgramCounterVM:
         return lax.while_loop(cond, body, state)
 
     def run(self, inputs: dict[str, Array]) -> VMResult:
-        """Execute the batched program to completion (jitted end-to-end)."""
-        state = self._jitted(inputs)
+        """Execute the batched program to completion (jitted end-to-end).
+
+        On accelerators this runs two jitted stages — state construction,
+        then the while loop with the state pytree donated into it — so a
+        run never holds more than one copy of the VM state.  On CPU (no
+        donation support) the single composed program is used; the staged
+        path would just cost an extra compile and dispatch.
+        """
+        if not self._donate:
+            return self._result(self._jitted(inputs))
+        state = self._jitted_start(inputs)
+        state = self._jitted_loop(state)
         return self._result(state)
 
     def _result(self, state) -> VMResult:
@@ -420,6 +581,7 @@ class ProgramCounterVM:
             steps=steps,
             mean_occupancy=mean_occ,
             fused_from=lp.fused_from,
+            num_devices=self.mesh.size if self.mesh is not None else 1,
         )
         return VMResult(
             outputs=outputs,

@@ -321,6 +321,7 @@ def make_nuts_kernel(
     use_kernel: bool = False,
     schedule: str = "earliest",
     fuse: bool = True,
+    mesh=None,
 ) -> batching.AutobatchedFunction:
     """The public NUTS entry point, on the decorator-first pytree API.
 
@@ -338,7 +339,11 @@ def make_nuts_kernel(
 
     ``schedule`` and ``fuse`` are the pc backend's dispatch knobs (see
     :mod:`repro.core.pc_vm` / :mod:`repro.core.fusion`); both are bit-exact,
-    so every combination samples identical chains.
+    so every combination samples identical chains.  ``mesh`` (``None``, a
+    device count, or a 1-D ``jax.sharding.Mesh``) shards the chain axis
+    across devices — chains are embarrassingly parallel, so the only
+    cross-device traffic is the VM's scalar dispatch reductions, and the
+    sampled chains are bit-identical to the unsharded run.
     """
     program = build_nuts_program(target, settings)
     vec = spec((target.dim,), jnp.float32)
@@ -353,6 +358,7 @@ def make_nuts_kernel(
         use_kernel=use_kernel,
         schedule=schedule,
         fuse=fuse,
+        mesh=mesh,
     )
 
 

@@ -51,6 +51,12 @@ class EngineConfig:
     eos_id: int = 0
     temperature: float = 0.0
     backend: str = "pc"  # pc | local | local_eager
+    # Lane sharding (pc backend): None, a device count, or a 1-D Mesh.
+    # Lanes are independent request queues, so sharding them across devices
+    # is multi-device continuous batching — each device serves lanes/n
+    # queues, and the VM's dispatch reductions are the only cross-device
+    # traffic per token.  ``lanes`` must divide across the mesh.
+    mesh: Any = None
 
 
 def _cache_layout(model: Model, window: int):
@@ -89,6 +95,7 @@ class GenerationEngine:
             batch_size=cfg.lanes,
             max_depth=4,
             max_steps=2_000_000,
+            mesh=cfg.mesh,
         )
 
     # ------------------------------------------------------------------

@@ -1,0 +1,16 @@
+"""Suite-wide setup: fake a multi-device host platform.
+
+Lane sharding (``mesh=``) needs more than one device to mean anything, and
+CI runs on CPU-only machines.  Force 8 host CPU devices *before the first
+jax import* (this conftest is imported by pytest ahead of every test
+module), so sharded execution is exercised by the regular tier-1 run.
+Single-device semantics are unchanged — jit still places unsharded work on
+device 0 — and an operator-provided setting is respected.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()

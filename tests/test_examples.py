@@ -1,0 +1,45 @@
+"""Smoke-test the example scripts end to end: they are user-facing entry
+points and must keep running as the API evolves.  Each runs in a
+subprocess (clean jax state, same interpreter) at tiny sizes."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_example(script: str, *args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, str(REPO / "examples" / script), *args],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+
+
+pytestmark = pytest.mark.slow  # subprocess smokes; the docs CI job runs
+# them by path, the tier-1 driver runs the whole suite unfiltered.
+
+
+def test_quickstart_runs():
+    proc = _run_example("quickstart.py")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    # Spot-check the printed results, not just the exit code.
+    assert "expect 0 8 16 111 118 178" in proc.stdout
+    assert "fib(10) -> 55" in proc.stdout
+    assert "CacheInfo" in proc.stdout
+
+
+def test_nuts_logreg_runs_tiny():
+    proc = _run_example("nuts_logreg.py", "--chains", "3", "--steps", "2")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "converged: True" in proc.stdout
+    assert "finite: True" in proc.stdout

@@ -1,0 +1,235 @@
+"""Lane sharding (VMConfig.mesh / autobatch(mesh=...)): bit-exactness with
+unsharded execution, layout of the sharded state, cache-key isolation,
+validation errors, and the AOT path.  The suite runs with 8 forced host
+CPU devices (tests/conftest.py)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, frontend, ir, lowering, pc_vm
+from repro.core.batching import Batched, autobatch
+from repro.core.frontend import I32
+
+from tests.test_core import FIB, build_fib
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2, reason="needs >= 2 devices (see tests/conftest.py)"
+)
+
+
+# ----------------------------------------------------------------------
+# resolve_mesh / mesh_cache_key
+# ----------------------------------------------------------------------
+
+
+class TestResolveMesh:
+    def test_none_passthrough(self):
+        assert pc_vm.resolve_mesh(None) is None
+        assert pc_vm.mesh_cache_key(None) is None
+
+    def test_int_builds_1d_mesh(self):
+        m = pc_vm.resolve_mesh(1)
+        assert m.axis_names == (pc_vm.LANE_AXIS,)
+        assert m.size == 1
+
+    def test_explicit_mesh_passthrough(self):
+        m = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("lanes",))
+        assert pc_vm.resolve_mesh(m) is m
+
+    def test_2d_mesh_rejected(self):
+        devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+        m = jax.sharding.Mesh(devs, ("a", "b"))
+        with pytest.raises(ValueError, match="1-D mesh"):
+            pc_vm.resolve_mesh(m)
+
+    def test_too_many_devices(self):
+        with pytest.raises(ValueError, match="devices"):
+            pc_vm.resolve_mesh(jax.device_count() + 1)
+
+    def test_nonpositive(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            pc_vm.resolve_mesh(0)
+
+    @multi_device
+    def test_cache_key_int_and_mesh_agree(self):
+        m = jax.sharding.Mesh(np.asarray(jax.devices()[:2]), (pc_vm.LANE_AXIS,))
+        assert pc_vm.mesh_cache_key(2) == pc_vm.mesh_cache_key(m)
+        assert pc_vm.mesh_cache_key(2) != pc_vm.mesh_cache_key(1)
+
+
+# ----------------------------------------------------------------------
+# VM-level sharded execution
+# ----------------------------------------------------------------------
+
+
+def _fib_inputs(z):
+    n = (np.arange(z) % 13).astype(np.int32)
+    return n, {ir.qualify("fib", "n"): n}
+
+
+class TestShardedVM:
+    @multi_device
+    @pytest.mark.parametrize("schedule", pc_vm.SCHEDULES)
+    def test_bit_exact_across_mesh(self, schedule):
+        low = lowering.lower(build_fib())
+        z = 8
+        n, inputs = _fib_inputs(z)
+        base = pc_vm.ProgramCounterVM(
+            low, pc_vm.VMConfig(batch_size=z, max_depth=24, schedule=schedule)
+        ).run(inputs)
+        for mesh in (1, 2, jax.device_count()):
+            res = pc_vm.ProgramCounterVM(
+                low,
+                pc_vm.VMConfig(batch_size=z, max_depth=24,
+                               schedule=schedule, mesh=mesh),
+            ).run(inputs)
+            for k in base.outputs:
+                np.testing.assert_array_equal(
+                    np.asarray(res.outputs[k]), np.asarray(base.outputs[k]),
+                    err_msg=f"schedule={schedule} mesh={mesh}",
+                )
+            assert int(res.steps) == int(base.steps)
+            assert res.sched.num_devices == mesh
+
+    @multi_device
+    def test_output_is_lane_sharded(self):
+        low = lowering.lower(build_fib())
+        z = 8
+        n, inputs = _fib_inputs(z)
+        vm = pc_vm.ProgramCounterVM(
+            low, pc_vm.VMConfig(batch_size=z, max_depth=24, mesh=2)
+        )
+        res = vm.run(inputs)
+        (out,) = res.outputs.values()
+        assert pc_vm.LANE_AXIS in str(out.sharding.spec)
+        np.testing.assert_array_equal(np.asarray(out), FIB[n])
+
+    def test_indivisible_batch_rejected(self):
+        low = lowering.lower(build_fib())
+        with pytest.raises(ValueError, match="divide"):
+            pc_vm.ProgramCounterVM(
+                low, pc_vm.VMConfig(batch_size=3, mesh=2)
+            )
+
+    def test_use_kernel_with_mesh_rejected(self):
+        low = lowering.lower(build_fib())
+        with pytest.raises(ValueError, match="use_kernel"):
+            pc_vm.ProgramCounterVM(
+                low, pc_vm.VMConfig(batch_size=4, mesh=2, use_kernel=True)
+            )
+
+    @multi_device
+    def test_staged_donation_path_matches_run(self):
+        """run() takes the composed program on CPU (no donation there);
+        the staged init/donated-loop pair used on accelerators must stay
+        equivalent, so exercise it explicitly."""
+        low = lowering.lower(build_fib())
+        z = 8
+        n, inputs = _fib_inputs(z)
+        vm = pc_vm.ProgramCounterVM(
+            low, pc_vm.VMConfig(batch_size=z, max_depth=24, mesh=2)
+        )
+        staged = vm._result(vm._jitted_loop(vm._jitted_start(inputs)))
+        np.testing.assert_array_equal(
+            np.asarray(list(staged.outputs.values())[0]), FIB[n]
+        )
+        assert bool(staged.converged)
+
+
+# ----------------------------------------------------------------------
+# Pytree API plumbing
+# ----------------------------------------------------------------------
+
+
+class TestAutobatchMesh:
+    @multi_device
+    def test_decorator_mesh_matches_unsharded(self):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, max_depth=24)
+        def fib(n):
+            if n < 2:
+                return n
+            return fib(n - 1) + fib(n - 2)
+
+        sharded = autobatch(fib.program, max_depth=24, mesh=2)
+        n = (np.arange(8) % 12).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(sharded(n)["out"]), np.asarray(fib(n))
+        )
+        assert sharded.last_result.sched.num_devices == 2
+
+    @multi_device
+    def test_mesh_in_cache_key(self):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("double", ["x"], ["out"], {"x": I32}, {"out": I32})
+        fb.assign("out", lambda x: 2 * x, ["x"])
+        fb.return_()
+        pb.add(fb)
+        f_plain = autobatch(pb.build())
+        f_mesh = autobatch(pb.build(), mesh=2)
+        x = np.arange(4, dtype=np.int32)
+        assert f_plain._aval_key({"x": x}, 4) != f_mesh._aval_key({"x": x}, 4)
+        np.testing.assert_array_equal(
+            np.asarray(f_mesh(x)["out"]), np.asarray(f_plain(x)["out"])
+        )
+
+    @multi_device
+    def test_shared_args_and_pytree_outputs(self):
+        from repro.core.batching import Shared
+
+        pb = frontend.ProgramBuilder()
+        fb = pb.function(
+            "clampsum", ["x", "cap"], ["tot"],
+            {"x": I32, "cap": I32}, {"tot": I32},
+        )
+        fb.const(0, jnp.int32, out="tot")
+        with fb.while_(lambda x: x > 0, ["x"]):
+            fb.assign("tot", lambda t, x, c: jnp.minimum(t + x, c),
+                      ["tot", "x", "cap"])
+            fb.assign("x", lambda x: x - 1, ["x"])
+        fb.return_()
+        pb.add(fb)
+        kern = autobatch(
+            pb, in_specs=(Batched(I32), Shared(I32)), mesh=2
+        )
+        ref = autobatch(pb, in_specs=(Batched(I32), Shared(I32)))
+        x = np.array([0, 3, 7, 2], np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(kern(x, np.int32(9))["tot"]),
+            np.asarray(ref(x, np.int32(9))["tot"]),
+        )
+
+    @multi_device
+    def test_aot_lower_and_cost_analysis(self):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, max_depth=16,
+                   mesh=2)
+        def tri(n):
+            if n < 1:
+                return n
+            return n + tri(n - 1)
+
+        handle = tri.lower(np.arange(4, dtype=np.int32))
+        text = handle.as_text()
+        assert "while" in text
+        cost = handle.cost_analysis()
+        assert isinstance(cost, dict)
+
+    @multi_device
+    def test_legacy_api_shim_passes_mesh(self):
+        prog = build_fib()
+        n = np.array([5, 9, 2, 11], np.int32)
+        with pytest.warns(DeprecationWarning):
+            got = api.autobatch(prog, 4, max_depth=24, mesh=2)({"n": n})
+        np.testing.assert_array_equal(np.asarray(got["out"]), FIB[n])
+
+    @multi_device
+    def test_stack_overflow_still_raised_sharded(self):
+        @autobatch(in_specs=(Batched(I32),), out_spec=I32, max_depth=4,
+                   mesh=2)
+        def deep(n):
+            if n < 1:
+                return n
+            return deep(n - 1)
+
+        with pytest.raises(pc_vm.StackOverflow, match="max_depth"):
+            deep(np.array([9, 0], np.int32))

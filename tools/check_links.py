@@ -1,0 +1,43 @@
+"""Markdown link check: every relative link in the repo's *.md files must
+point at an existing file (anchors and external URLs are skipped — no
+network access in CI).
+
+    python tools/check_links.py [paths...]      # default: repo *.md + docs/
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = sorted(REPO.glob("*.md")) + sorted(REPO.glob("docs/*.md"))
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_links: {len(files)} files, {len(errors)} broken links]")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
