@@ -1,9 +1,48 @@
-"""Shared benchmark utilities: timing, result tables."""
+"""Shared benchmark utilities: timing, result tables, strict JSON I/O."""
 from __future__ import annotations
 
+import json
+import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Any, Callable
+
+
+def json_sanitize(obj: Any) -> Any:
+    """Replace non-finite floats with ``None``, recursively.
+
+    ``json.dump`` would otherwise emit bare ``NaN``/``Infinity`` tokens,
+    which are not JSON and break strict parsers downstream.
+    """
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: json_sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_sanitize(v) for v in obj]
+    return obj
+
+
+def write_json(path: str, payload: Any) -> None:
+    """Write a ``BENCH_*.json`` artifact as *strict* JSON.
+
+    Non-finite floats become ``null`` and ``allow_nan=False`` guarantees
+    nothing non-strict can ever sneak into the file (CI parses every
+    emitted artifact with a strict parser — see ``validate_bench_json``).
+    """
+    with open(path, "w") as f:
+        json.dump(json_sanitize(payload), f, indent=2, allow_nan=False)
+
+
+def _reject_constant(name: str) -> float:
+    raise ValueError(f"non-strict JSON constant {name!r}")
+
+
+def validate_bench_json(paths: list[str]) -> None:
+    """Strict-parse benchmark artifacts; raise on NaN/Infinity tokens."""
+    for p in paths:
+        with open(p) as f:
+            json.load(f, parse_constant=_reject_constant)
 
 
 def best_of(fn: Callable[[], None], repeats: int = 3) -> float:

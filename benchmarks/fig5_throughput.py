@@ -36,14 +36,13 @@ trajectory is tracked across PRs (see benchmarks/run.py).
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
 import jax
 
 from repro.mcmc import iterative, nuts, targets
 
-from .common import Table, best_of
+from .common import Table, best_of, write_json
 
 #: (schedule, fuse, mesh) combinations the plain "pc" arm expands into
 #: (mesh=None means unsharded single-device execution).
@@ -163,9 +162,13 @@ def throughput_sweep(
             ndev = ndev_of(mesh)
             z_arm = z * ndev if (per_device_batch and mesh is not None) else z
             if mesh is not None and z_arm % ndev:
-                # Batch doesn't divide across this arm's mesh: nan the cell
-                # (like the unbatched cap) instead of aborting the sweep.
+                # Batch doesn't divide across this arm's mesh: nan the
+                # rendered cell (like the unbatched cap) but record the
+                # gap as null — JSON has no NaN, and strict parsers (CI)
+                # reject the bare token json.dump would emit.
                 row.append(float("nan"))
+                record(arm, z_arm, None,
+                       skipped="batch does not divide across mesh")
                 continue
             theta0, eps_arg, keys = inputs_for(z_arm)
             if arm == "iterative":
@@ -283,8 +286,7 @@ def main(argv=None) -> int:
                        "pc_variants": [list(v) for v in pc_variants], **kw},
             "records": records,
         }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2)
+        write_json(args.json, payload)
         print(f"[wrote {args.json}: {len(records)} records]")
     return 0
 

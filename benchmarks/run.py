@@ -12,10 +12,12 @@ renders the roofline table from any dry-run artifacts present.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 from . import fig5_throughput, fig6_utilization, roofline, serve_bench
+from .common import validate_bench_json
 
 
 def main(argv=None) -> int:
@@ -32,9 +34,18 @@ def main(argv=None) -> int:
     ap.add_argument("--per-device-batch", action="store_true",
                     help="fig5: treat --batches as per-device (mesh arms "
                          "scale total batch by device count)")
+    ap.add_argument("--serve-arrivals", default="closed",
+                    choices=("closed", "poisson"),
+                    help="serve bench mode: closed-loop sweep or open-loop "
+                         "Poisson continuous batching")
+    ap.add_argument("--serve-requests", type=int, default=16,
+                    help="open-loop serve: requests in the arrival stream")
     ap.add_argument("--json-out", default="BENCH_fig5.json",
                     help="path for the machine-readable fig5 results "
                          "(tracked across PRs); empty string disables")
+    ap.add_argument("--serve-json-out", default="BENCH_serve.json",
+                    help="path for the machine-readable serve results; "
+                         "empty string disables")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -44,6 +55,7 @@ def main(argv=None) -> int:
     common = (["--full"] if args.full else []) + (
         ["--batches", args.batches] if args.batches else []
     )
+    emitted: list[str] = []  # artifacts THIS run wrote (validated below)
     t0 = time.time()
     if want("fig5"):
         print()
@@ -56,25 +68,40 @@ def main(argv=None) -> int:
                 fig5_args += ["--per-device-batch"]
         if args.json_out:
             fig5_args += ["--json", args.json_out]
+            emitted.append(args.json_out)
         fig5_throughput.main(fig5_args)
     if want("fig6"):
         print()
         fig6_utilization.main(common)
     if want("serve"):
         print()
-        serve_args = []
+        serve_args = ["--arrivals", args.serve_arrivals]
+        if args.serve_arrivals == "poisson":
+            serve_args += ["--num-requests", str(args.serve_requests)]
         if args.mesh:
             # serve_bench takes a single device count: use the largest.
             counts = [m for m in args.mesh.split(",")
                       if m.strip().lower() not in ("none", "0")]
             if counts:
-                serve_args = ["--mesh", max(counts, key=int)]
+                serve_args += ["--mesh", max(counts, key=int)]
+        if args.serve_json_out:
+            serve_args += ["--json", args.serve_json_out]
+            emitted.append(args.serve_json_out)
         serve_bench.main(serve_args)
     if want("roofline"):
         print()
         roofline.main([])
         print()
         roofline.main(["--mesh", "2x16x16"])
+    # Every artifact this run emitted must parse under *strict* JSON
+    # (json.dump with allow_nan=False upstream; a bare NaN/Infinity here
+    # fails CI instead of poisoning the perf-trajectory records).  Only
+    # files this run wrote are checked — a stale pre-existing artifact
+    # must not fail an unrelated run.
+    artifacts = sorted(p for p in emitted if os.path.exists(p))
+    if artifacts:
+        validate_bench_json(artifacts)
+        print(f"[validated strict JSON: {', '.join(artifacts)}]")
     print(f"\n[benchmarks done in {time.time() - t0:.1f}s]")
     return 0
 

@@ -1,6 +1,20 @@
-"""Serving-engine benchmark: tokens/sec of the VM-scheduled generation
-engine (the paper's runtime as a continuous-batching scheduler) vs the
-naive sequential per-request loop, on a reduced-config LM."""
+"""Serving-engine benchmark: the VM-scheduled generation engine vs the
+naive sequential per-request loop, on a reduced-config LM.
+
+Two modes:
+
+* ``--arrivals closed`` (default): the seed's closed-loop sweep — every
+  lane's request queue is fixed before the single compiled program
+  launches; reports tokens/sec vs the sequential oracle.
+* ``--arrivals poisson``: open-loop continuous batching — requests arrive
+  by a Poisson process at ``--rate`` req/s and are admitted into free
+  lanes between VM segments (retire-and-refill); reports p50/p99
+  arrival-to-finish latency and lane occupancy, next to a batch-mode
+  (all-at-once) run of the same request set for the closed-loop contrast.
+
+``--json PATH`` writes machine-readable records (strict JSON — NaN is
+serialized as ``null``).
+"""
 from __future__ import annotations
 
 import argparse
@@ -12,17 +26,34 @@ import numpy as np
 
 from repro import configs
 from repro.models import get_model
-from repro.serve.engine import EngineConfig, GenerationEngine
+from repro.serve.engine import EngineConfig, GenerationEngine, Request
 
-from .common import Table
+from .common import Table, write_json
+
+
+def _load_model():
+    """Build the bench LM once per sweep (params are sweep-invariant)."""
+    cfg = configs.get_smoke_config("smollm-135m")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(cfg, model, params, lanes: int, *, max_new: int,
+            prompt_len: int, requests_per_lane: int, mesh,
+            segment_steps: int = 64):
+    ecfg = EngineConfig(
+        lanes=lanes, max_context=prompt_len + max_new + 2,
+        max_prompt_len=prompt_len, max_new_tokens=max_new,
+        requests_per_lane=requests_per_lane, eos_id=0, backend="pc",
+        mesh=mesh, segment_steps=segment_steps,
+    )
+    return GenerationEngine(model, params, ecfg)
 
 
 def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
                 prompt_len: int = 8, requests_per_lane: int = 2,
-                mesh=None) -> Table:
-    cfg = configs.get_smoke_config("smollm-135m")
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+                mesh=None) -> tuple[Table, list[dict]]:
     tab = Table(
         "Serve engine — generated tokens/sec (VM engine vs sequential"
         + (f", lanes sharded over {mesh} devices" if mesh else "") + ")",
@@ -30,19 +61,20 @@ def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
     )
     nan = float("nan")
     rng = np.random.default_rng(0)
+    records: list[dict] = []
+    cfg, model, params = _load_model()
     for lanes in lane_counts:
         if mesh and lanes % mesh:
             # Lanes must divide across the mesh: keep the row (as nans)
             # so the gap is visible, matching fig5/fig6.
             tab.add(lanes, mesh, nan, nan, nan, nan)
+            records.append({"mode": "closed", "lanes": lanes,
+                            "mesh": mesh, "tok_s": None,
+                            "skipped": "lanes do not divide across mesh"})
             continue
-        ecfg = EngineConfig(
-            lanes=lanes, max_context=prompt_len + max_new + 2,
-            max_prompt_len=prompt_len, max_new_tokens=max_new,
-            requests_per_lane=requests_per_lane, eos_id=0, backend="pc",
-            mesh=mesh,
-        )
-        eng = GenerationEngine(model, params, ecfg)
+        eng = _engine(cfg, model, params, lanes, max_new=max_new,
+                      prompt_len=prompt_len,
+                      requests_per_lane=requests_per_lane, mesh=mesh)
         prompts = rng.integers(
             1, cfg.vocab_size, (lanes, requests_per_lane, prompt_len)
         ).astype(np.int32)
@@ -59,7 +91,77 @@ def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
         t_seq = time.perf_counter() - t0
         tab.add(lanes, mesh or 1, n_tok / t_vm, n_tok / t_seq, t_seq / t_vm,
                 round(res["utilization"] or 0.0, 3))
-    return tab
+        records.append({
+            "mode": "closed", "lanes": lanes, "mesh": mesh or 1,
+            "tok_s": n_tok / t_vm, "seq_tok_s": n_tok / t_seq,
+            "utilization": res["utilization"],
+        })
+    return tab, records
+
+
+def poisson_requests(num: int, rate: float, prompt_len: int,
+                     vocab: int, seed: int = 0) -> list[Request]:
+    """An open-loop arrival stream: exponential gaps at ``rate`` req/s."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=num))
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(
+                1, vocab, int(rng.integers(1, prompt_len + 1))
+            ).astype(np.int32),
+            arrival=float(t),
+        )
+        for i, t in enumerate(arrivals)
+    ]
+
+
+def open_loop_sweep(lane_counts: list[int], *, rate: float,
+                    num_requests: int, segment_steps: int,
+                    max_new: int = 16, prompt_len: int = 8,
+                    mesh=None) -> tuple[Table, list[dict]]:
+    """Open-loop (Poisson) vs batch (all-at-once) continuous serving."""
+    tab = Table(
+        f"Serve engine, open loop — Poisson arrivals at {rate} req/s vs "
+        "all-at-once batch (retire-and-refill in both)",
+        ["lanes", "mode", "tok_s", "p50_s", "p99_s", "occupancy",
+         "segments"],
+    )
+    records: list[dict] = []
+    cfg, model, params = _load_model()
+    for lanes in lane_counts:
+        if mesh and lanes % mesh:
+            tab.add(lanes, "poisson", *([float("nan")] * 5))
+            records.append({"mode": "poisson", "lanes": lanes,
+                            "mesh": mesh, "tok_s": None,
+                            "skipped": "lanes do not divide across mesh"})
+            continue
+        eng = _engine(cfg, model, params, lanes, max_new=max_new,
+                      prompt_len=prompt_len, requests_per_lane=1,
+                      mesh=mesh, segment_steps=segment_steps)
+        reqs = poisson_requests(num_requests, rate, prompt_len,
+                                cfg.vocab_size)
+        # Warm-up: compile the stepper path on a tiny closed run.
+        eng.serve([Request(rid=0, prompt=np.array([1], np.int32))])
+        for mode in ("poisson", "batch"):
+            batch = [Request(r.rid, r.prompt, 0.0) for r in reqs] \
+                if mode == "batch" else reqs
+            comps, stats = eng.serve(batch, segment_steps=segment_steps)
+            lat = np.array([c.latency for c in comps])
+            p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+            tok_s = stats.generated_tokens / stats.wall_time
+            tab.add(lanes, mode, tok_s, p50, p99,
+                    round(stats.occupancy, 3), stats.segments)
+            records.append({
+                "mode": mode, "lanes": lanes, "mesh": mesh or 1,
+                "rate": rate if mode == "poisson" else None,
+                "num_requests": num_requests,
+                "segment_steps": segment_steps, "tok_s": tok_s,
+                "p50_latency_s": p50, "p99_latency_s": p99,
+                "occupancy": stats.occupancy, "segments": stats.segments,
+                "vm_steps": stats.vm_steps,
+            })
+    return tab, records
 
 
 def main(argv=None) -> int:
@@ -68,10 +170,40 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default="none",
                     help="shard lanes over this many devices ('none' = "
                          "unsharded; lanes must divide across the mesh)")
+    ap.add_argument("--arrivals", default="closed",
+                    choices=("closed", "poisson"),
+                    help="closed = pre-assigned queues (seed baseline); "
+                         "poisson = open-loop continuous batching")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="poisson arrival rate, requests/sec")
+    ap.add_argument("--num-requests", type=int, default=32,
+                    help="poisson mode: total requests in the stream")
+    ap.add_argument("--segment-steps", type=int, default=64,
+                    help="VM dispatches per segment between host "
+                         "admission/retire checks")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable records (strict JSON)")
     args = ap.parse_args(argv)
     lanes = [int(x) for x in args.lanes.split(",")]
     mesh = None if args.mesh.lower() in ("none", "0") else int(args.mesh)
-    print(serve_sweep(lanes, mesh=mesh).render())
+    if args.arrivals == "poisson":
+        tab, records = open_loop_sweep(
+            lanes, rate=args.rate, num_requests=args.num_requests,
+            segment_steps=args.segment_steps, mesh=mesh,
+        )
+    else:
+        tab, records = serve_sweep(lanes, mesh=mesh)
+    print(tab.render())
+    if args.json:
+        write_json(args.json, {
+            "benchmark": "serve_bench",
+            "config": {"arrivals": args.arrivals, "lanes": lanes,
+                       "mesh": mesh, "rate": args.rate,
+                       "num_requests": args.num_requests,
+                       "segment_steps": args.segment_steps},
+            "records": records,
+        })
+        print(f"[wrote {args.json}: {len(records)} records]")
     return 0
 
 

@@ -1,6 +1,7 @@
 """Serve a small LM with batched requests through the autobatch VM.
 
     PYTHONPATH=src python examples/serve_lm.py --lanes 8
+    PYTHONPATH=src python examples/serve_lm.py --lanes 4 --open-loop
 
 The generation loop (streaming prefill -> sample-until-EOS -> next
 request in the lane's queue) is a *program in the paper's IR*; the
@@ -8,6 +9,10 @@ program-counter VM executes all lanes in lockstep with masking, so
 requests of different prompt lengths / generation lengths / queue depths
 batch together — continuous batching as a compiler artifact rather than
 bespoke scheduler code.
+
+With ``--open-loop``, the engine instead runs the resumable (segmented)
+VM: requests are admitted from a host-side queue as lanes retire, and
+completions stream out the moment they finish (retire-and-refill).
 """
 import argparse
 import time
@@ -17,7 +22,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import get_model
-from repro.serve.engine import EngineConfig, GenerationEngine
+from repro.serve.engine import EngineConfig, GenerationEngine, Request
 
 
 def main():
@@ -27,6 +32,11 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--check", action="store_true",
                     help="verify against the sequential oracle")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="continuous batching: admit requests from a "
+                         "host-side queue between VM segments")
+    ap.add_argument("--num-requests", type=int, default=16,
+                    help="open-loop: total requests in the stream")
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config("smollm-135m")
@@ -48,6 +58,35 @@ def main():
           f"(loop-only program -> none)")
 
     rng = np.random.default_rng(0)
+    if args.open_loop:
+        reqs = [
+            Request(
+                rid=i,
+                prompt=rng.integers(
+                    1, cfg.vocab_size,
+                    int(rng.integers(1, ecfg.max_prompt_len + 1)),
+                ).astype(np.int32),
+                arrival=float(i) * 0.02,  # a 50 req/s trickle
+            )
+            for i in range(args.num_requests)
+        ]
+        # Warm-up: compile the segmented path off the measured run.
+        engine.serve([Request(rid=0, prompt=np.array([1], np.int32))])
+        comps, stats = engine.serve(
+            reqs,
+            on_finish=lambda c: print(
+                f"  request {c.rid} done on lane {c.lane}: "
+                f"{len(c.tokens)} tokens, latency {c.latency * 1e3:.1f}ms"
+            ),
+        )
+        lat = np.array([c.latency for c in comps])
+        print(f"served {stats.completions} requests / "
+              f"{stats.generated_tokens} tokens in {stats.wall_time:.2f}s "
+              f"over {stats.segments} segments; occupancy "
+              f"{stats.occupancy:.2f}, p50 latency {np.percentile(lat, 50) * 1e3:.1f}ms, "
+              f"p99 {np.percentile(lat, 99) * 1e3:.1f}ms")
+        return
+
     prompts = rng.integers(
         1, cfg.vocab_size,
         (args.lanes, args.requests_per_lane, ecfg.max_prompt_len),

@@ -74,6 +74,7 @@ __all__ = [
     "Shared",
     "AutobatchedFunction",
     "AotLowered",
+    "Stepper",
     "autobatch",
     "DEFAULT_NAMESPACE",
 ]
@@ -141,6 +142,18 @@ def _flatten_spec(entry: Any) -> tuple[list[jax.ShapeDtypeStruct], Any, bool]:
 # --------------------------------------------------------------------------
 
 
+def _raise_if_overflowed(flags, batch_size: int, max_depth: int) -> None:
+    """Shared overflow gate: silently-corrupted members (dropped
+    out-of-range pushes) must never escape the pytree API."""
+    if flags.any():
+        raise pc_vm.StackOverflow(
+            f"pc/variable stack overflow: {int(flags.sum())} of "
+            f"{batch_size} batch members exceeded max_depth={max_depth}; "
+            "their results would be invalid (out-of-range pushes are "
+            "dropped). Pass a larger max_depth= to autobatch()."
+        )
+
+
 class _PcExecutor:
     def __init__(self, lowered: ir.LoweredProgram, main: str,
                  config: pc_vm.VMConfig):
@@ -156,17 +169,11 @@ class _PcExecutor:
         res = self.vm.run(self._qualify(inputs))
         self.last_result = res
         if res.depth_exceeded is not None:
-            # Deliberate device sync: silently-corrupted members (dropped
-            # out-of-range pushes) must never escape the pytree API.
-            flags = jax.device_get(res.depth_exceeded)
-            if flags.any():
-                raise pc_vm.StackOverflow(
-                    f"pc/variable stack overflow: {int(flags.sum())} of "
-                    f"{self.batch_size} batch members exceeded "
-                    f"max_depth={self.vm.config.max_depth}; their results "
-                    "would be invalid (out-of-range pushes are dropped). "
-                    "Pass a larger max_depth= to autobatch()."
-                )
+            # Deliberate device sync before returning results.
+            _raise_if_overflowed(
+                jax.device_get(res.depth_exceeded),
+                self.batch_size, self.vm.config.max_depth,
+            )
         return {k.split("/", 1)[1]: v for k, v in res.outputs.items()}
 
     def lower(self, inputs: dict[str, Any]):
@@ -255,6 +262,132 @@ class AotLowered:
         if isinstance(cost, (list, tuple)):
             cost = cost[0] if cost else {}
         return dict(cost or {})
+
+
+# --------------------------------------------------------------------------
+# Segmented execution handle
+# --------------------------------------------------------------------------
+
+
+class Stepper:
+    """Resumable, state-in/state-out execution of an autobatched function.
+
+    Produced by :meth:`AutobatchedFunction.stepper`; pc backend only.  A
+    stepper decouples *holding the VM state* from *advancing it*: the
+    caller owns an opaque snapshot pytree and threads it through
+    ``step()`` segments, which lets a host loop retire finished lanes and
+    refill them with new work between segments (continuous batching — see
+    ``repro/serve/engine.py``)::
+
+        st = fn.stepper(*args)          # cache-keyed like fn.lower()
+        state = st.init()
+        while not st.done(state):
+            state = st.step(state, 64)  # <= 64 VM dispatches
+        out = st.result(state)          # == fn(*args), bit-exactly
+
+    Snapshots are donatable: on accelerator backends ``step``, ``inject``
+    and ``park`` donate the incoming snapshot — do not reuse a snapshot
+    after passing it in.  Chaining segments of any sizes is bit-exact with
+    the single-shot call for every schedule x fuse x mesh combination
+    (property-tested in ``tests/test_core_property.py``).
+    """
+
+    def __init__(self, fn: "AutobatchedFunction", inputs: dict, z: int):
+        self._fn = fn
+        self._ex = fn._executor(z)
+        self._inputs = inputs
+        self.batch_size = z
+
+    @property
+    def vm(self) -> pc_vm.ProgramCounterVM:
+        """The underlying VM (shared with plain calls at this batch size)."""
+        return self._ex.vm
+
+    def init(self, *args) -> dict:
+        """A fresh initial snapshot.
+
+        With no arguments, uses the values ``stepper(...)`` was created
+        with; with arguments, re-binds new values (same avals).
+        """
+        inputs = self._inputs
+        if args:
+            inputs, z = self._fn._bind(args)
+            if z != self.batch_size:
+                raise TypeError(
+                    f"stepper.init: batch size {z} != {self.batch_size}"
+                )
+        return self.vm.start(self._ex._qualify(inputs))
+
+    def step(self, state: dict, num_steps: int) -> dict:
+        """Advance by at most ``num_steps`` VM loop iterations."""
+        return self.vm.run_segment(state, num_steps)
+
+    def lane_done(self, state: dict) -> jax.Array:
+        """``[batch]`` bool: which lanes have halted."""
+        return self.vm.lane_done(state)
+
+    def done(self, state: dict) -> bool:
+        """True once the VM cannot advance this snapshot any further
+        (device sync): every lane has halted, or the ``max_steps`` budget
+        is exhausted — exactly when a single-shot call would return, so
+        the ``while not st.done(state)`` drive loop terminates whenever
+        ``fn(*args)`` would (check ``lane_done`` to tell the two apart).
+        """
+        if bool(jax.device_get(jnp.all(self.vm.lane_done(state)))):
+            return True
+        return self.steps(state) >= self.vm.config.max_steps
+
+    def steps(self, state: dict) -> int:
+        """Total VM loop iterations accumulated in this snapshot."""
+        return int(jax.device_get(state["steps"]))
+
+    def park(self, state: dict, mask) -> dict:
+        """Park masked lanes at the exit block (idle until re-injected)."""
+        return self.vm.park(state, mask)
+
+    def inject(self, state: dict, mask, *args) -> dict:
+        """Re-initialize masked lanes with fresh arguments.
+
+        ``args`` follow the function's calling convention with full
+        batched leading axes; only rows where ``mask`` is True are
+        consumed.  In-flight (unmasked) lanes are untouched.
+        """
+        inputs, z = self._fn._bind(args)
+        if z != self.batch_size:
+            raise TypeError(
+                f"stepper.inject: batch size {z} != {self.batch_size}"
+            )
+        return self.vm.inject(state, mask, self._ex._qualify(inputs))
+
+    def depth_exceeded(self, state: dict) -> jax.Array:
+        """``[batch]`` bool: lanes whose stacks overflowed ``max_depth``."""
+        return state["depth_exceeded"]
+
+    def outputs(self, state: dict) -> Any:
+        """The output pytree view of a snapshot (no overflow check).
+
+        Rows of lanes that have halted are final; rows of in-flight lanes
+        are whatever the program has written so far.
+        """
+        iface = self._fn._iface
+        main = self._ex.main
+        tops = state["tops"]
+        return jax.tree_util.tree_unflatten(
+            iface.out_treedef,
+            [tops[ir.qualify(main, name)] for name in iface.out_leaves],
+        )
+
+    def result(self, state: dict) -> Any:
+        """Final outputs with the overflow check of a plain call.
+
+        Raises :class:`pc_vm.StackOverflow` if any lane's stacks exceeded
+        ``max_depth`` (their results would be silently invalid).
+        """
+        _raise_if_overflowed(
+            jax.device_get(state["depth_exceeded"]),
+            self.batch_size, self.vm.config.max_depth,
+        )
+        return self.outputs(state)
 
 
 # --------------------------------------------------------------------------
@@ -555,6 +688,18 @@ class AutobatchedFunction:
             raise ValueError("AOT lowering requires the 'pc' backend")
         inputs, z = self._bind(args)
         return AotLowered(self._executor(z).lower(inputs))
+
+    def stepper(self, *args) -> Stepper:
+        """A :class:`Stepper` for segmented (resumable) execution (pc only).
+
+        Cache-keyed like :meth:`lower`: the stepper shares the per-batch-
+        size executor (and its compiled VM) with plain calls, so creating
+        one after calling the function costs no extra trace/lower/compile.
+        """
+        if self.backend != "pc":
+            raise ValueError("stepper requires the 'pc' backend")
+        inputs, z = self._bind(args)
+        return Stepper(self, inputs, z)
 
     # ------------------------------------------------------------------
     # Introspection

@@ -55,6 +55,25 @@ All schedules stay bit-exact under sharding: block bodies are per-lane, and
 the reductions above are integer min/sum/argmax, which are associative and
 placement-independent.  The loop-carried state is donated on accelerator
 backends so steady-state memory is flat at one copy of the VM state.
+
+Segmented (resumable) execution:
+
+``run()`` executes to completion, but the VM can also run in *segments*:
+``start()`` builds the initial state snapshot, ``run_segment(state, n)``
+advances it by at most ``n`` loop iterations and returns the updated
+snapshot, and ``result(state)`` materializes a :class:`VMResult` from any
+snapshot.  The segment loop reuses the exact same body function as the
+single-shot loop and the snapshot carries *all* execution state (pc
+stack/top, variable tops/stacks/pointers, overflow flags, step and
+occupancy counters), so chaining segments of any sizes is bit-exact with
+a single ``run()`` — the loop merely observes an extra iteration bound in
+its ``cond``.  Between segments the host may retire finished lanes
+(``lane_done``), park idle ones (``park``), and re-initialize a masked
+subset with fresh inputs (``inject``) — the primitive underneath
+retire-and-refill continuous batching (see ``repro/serve/engine.py``).
+Snapshots are donatable pytrees: on accelerator backends every
+state-in/state-out entry point donates its input snapshot, so steady-state
+memory stays flat at one copy of the VM state.
 """
 from __future__ import annotations
 
@@ -259,6 +278,13 @@ class ProgramCounterVM:
         self._donate = jax.default_backend() != "cpu"
         self._jitted_start = jax.jit(self._start)
         self._jitted_loop = jax.jit(self._loop, donate_argnums=(0,))
+        # Segmented-execution entry points.  All take the state snapshot
+        # first and donate it (where the backend supports donation), so a
+        # resumable run is as memory-flat as a single-shot one.
+        donate = (0,) if self._donate else ()
+        self._jitted_segment = jax.jit(self._segment, donate_argnums=donate)
+        self._jitted_inject = jax.jit(self._inject, donate_argnums=donate)
+        self._jitted_park = jax.jit(self._park, donate_argnums=donate)
 
     # ------------------------------------------------------------------
     # State construction
@@ -489,17 +515,18 @@ class ProgramCounterVM:
     def _run(self, inputs: dict[str, Array]) -> dict[str, Any]:
         return self._loop(self._start(inputs))
 
-    def _loop(self, state: dict[str, Any]) -> dict[str, Any]:
-        exit_idx = self.lowered.exit_index
-        collect = self.config.collect_block_stats
+    def _liveness_cond(self, state: dict[str, Any]) -> Array:
+        # Global liveness: ``any`` over the lane axis — a single bool
+        # all-reduce per iteration under a mesh.
+        return jnp.logical_and(
+            state["steps"] < self.config.max_steps,
+            jnp.any(state["pc_top"] < self.lowered.exit_index),
+        )
 
-        def cond(state):
-            # Global liveness: ``any`` over the lane axis — a single bool
-            # all-reduce per iteration under a mesh.
-            return jnp.logical_and(
-                state["steps"] < self.config.max_steps,
-                jnp.any(state["pc_top"] < exit_idx),
-            )
+    def _make_body(self) -> Callable:
+        """The loop body for this config's schedule (shared by the
+        single-shot and segmented loops, so the two are bit-exact)."""
+        collect = self.config.collect_block_stats
 
         def body_switch(state):
             i = self._pick_block(state)
@@ -534,8 +561,31 @@ class ProgramCounterVM:
             state["steps"] = state["steps"] + 1
             return state
 
-        body = body_sweep if self.config.schedule == "sweep" else body_switch
-        return lax.while_loop(cond, body, state)
+        return body_sweep if self.config.schedule == "sweep" else body_switch
+
+    def _loop(self, state: dict[str, Any]) -> dict[str, Any]:
+        return lax.while_loop(self._liveness_cond, self._make_body(), state)
+
+    def _segment(self, state: dict[str, Any], num_steps: Array) -> dict[str, Any]:
+        """At most ``num_steps`` more loop iterations from ``state``.
+
+        ``num_steps`` is a traced i32 scalar, so every segment size shares
+        one compiled executable.  The body is the exact function the
+        single-shot loop runs; only the ``cond`` gains the extra bound
+        (``steps`` is part of the carry, so the bound composes with
+        ``max_steps`` exactly as a single shot would observe it).
+        """
+        limit = jnp.minimum(
+            state["steps"] + jnp.asarray(num_steps, _I32),
+            jnp.asarray(self.config.max_steps, _I32),
+        )
+
+        def cond(st):
+            return jnp.logical_and(
+                st["steps"] < limit, self._liveness_cond(st)
+            )
+
+        return lax.while_loop(cond, self._make_body(), state)
 
     def run(self, inputs: dict[str, Array]) -> VMResult:
         """Execute the batched program to completion (jitted end-to-end).
@@ -550,6 +600,122 @@ class ProgramCounterVM:
             return self._result(self._jitted(inputs))
         state = self._jitted_start(inputs)
         state = self._jitted_loop(state)
+        return self._result(state)
+
+    # ------------------------------------------------------------------
+    # Segmented (resumable) execution
+    # ------------------------------------------------------------------
+
+    def start(self, inputs: dict[str, Array]) -> dict[str, Any]:
+        """Inputs -> an initial state snapshot (lane layout pinned).
+
+        The snapshot is an ordinary pytree of arrays; hold it on the host,
+        checkpoint it, or feed it straight back into :meth:`run_segment`.
+        """
+        return self._jitted_start(inputs)
+
+    def run_segment(
+        self, state: dict[str, Any], num_steps: int
+    ) -> dict[str, Any]:
+        """Advance a snapshot by at most ``num_steps`` loop iterations.
+
+        Returns the updated snapshot (the input snapshot is donated on
+        accelerator backends — do not reuse it).  A chain of segments of
+        any sizes is bit-exact with a single :meth:`run`: the segment loop
+        runs the identical body and the snapshot carries every piece of
+        execution state.  ``num_steps`` counts loop iterations — single
+        block dispatches for ``earliest``/``popular``, whole sweeps for
+        ``sweep`` — matching the ``steps`` counter.
+        """
+        return self._jitted_segment(state, jnp.asarray(num_steps, _I32))
+
+    def lane_done(self, state: dict[str, Any]) -> Array:
+        """Per-lane halt flags: ``[batch]`` bool, True once a lane exited."""
+        return state["pc_top"] >= self.lowered.exit_index
+
+    def park(self, state: dict[str, Any], mask: Array) -> dict[str, Any]:
+        """Force masked lanes to the exit block (idle, excluded from
+        liveness).  Used to hold lanes that have no work assigned yet."""
+        return self._jitted_park(state, jnp.asarray(mask, jnp.bool_))
+
+    def inject(
+        self, state: dict[str, Any], mask: Array, inputs: dict[str, Array]
+    ) -> dict[str, Any]:
+        """Re-initialize the masked lanes with fresh program inputs.
+
+        For lanes where ``mask`` is True this is exactly ``init_state``:
+        pc reset to the entry block, pc/variable stacks and pointers
+        cleared, overflow flags cleared, non-parameter tops zeroed, and
+        parameter tops loaded from ``inputs`` (full ``[batch, ...]``
+        arrays; unmasked rows are ignored).  Unmasked lanes — and the
+        global step/occupancy counters — are untouched, so in-flight work
+        keeps running.  This is the refill half of retire-and-refill.
+        """
+        cfg = self.config
+        lp = self.lowered
+        z = cfg.batch_size
+        fresh: dict[str, Array] = {}
+        for p in lp.main_params:
+            x = jnp.asarray(inputs[p])
+            if x.shape != (z,) + tuple(lp.var_specs[p].shape):
+                raise ValueError(
+                    f"inject input {p!r}: expected batched shape "
+                    f"{(z,) + tuple(lp.var_specs[p].shape)}, got {x.shape}"
+                )
+            fresh[p] = x.astype(lp.var_specs[p].dtype)
+        return self._jitted_inject(state, jnp.asarray(mask, jnp.bool_), fresh)
+
+    def _park(self, state: dict[str, Any], mask: Array) -> dict[str, Any]:
+        out = dict(state)
+        out["pc_top"] = jnp.where(
+            mask, jnp.asarray(self.lowered.exit_index, _I32), state["pc_top"]
+        )
+        return self._shard_state(out)
+
+    def _inject(
+        self,
+        state: dict[str, Any],
+        mask: Array,
+        fresh: dict[str, Array],
+    ) -> dict[str, Any]:
+        lp = self.lowered
+
+        def col_masked(new, old):
+            # [depth, batch, ...] arrays: mask selects whole lane columns.
+            m = mask.reshape((1,) + mask.shape + (1,) * (old.ndim - 2))
+            return jnp.where(m, new, old)
+
+        out = dict(state)
+        out["pc_top"] = jnp.where(
+            mask, jnp.asarray(lp.entry, _I32), state["pc_top"]
+        )
+        out["pc_ptr"] = jnp.where(mask, 1, state["pc_ptr"])
+        out["pc_stack"] = col_masked(
+            jnp.asarray(lp.exit_index, _I32), state["pc_stack"]
+        )
+        out["depth_exceeded"] = jnp.logical_and(
+            state["depth_exceeded"], jnp.logical_not(mask)
+        )
+        tops = dict(state["tops"])
+        for v in self._state_vars:
+            tops[v] = _masked(mask, jnp.zeros_like(tops[v]), tops[v])
+        for p in lp.main_params:
+            tops[p] = _masked(mask, fresh[p], tops[p])
+        out["tops"] = tops
+        out["stacks"] = {
+            v: col_masked(jnp.zeros_like(s), s)
+            for v, s in state["stacks"].items()
+        }
+        out["ptrs"] = {
+            v: jnp.where(mask, 0, p) for v, p in state["ptrs"].items()
+        }
+        return self._shard_state(out)
+
+    def result(self, state: dict[str, Any]) -> VMResult:
+        """Materialize a :class:`VMResult` from a state snapshot.
+
+        Valid on any snapshot; ``converged`` reports whether *all* lanes
+        have halted (partial snapshots simply report in-flight tops)."""
         return self._result(state)
 
     def _result(self, state) -> VMResult:

@@ -1,8 +1,11 @@
 """Autobatched generation engine: the serving loop IS a program in the
 paper's IR, executed by the program-counter VM.
 
-Each batch lane owns a queue of requests.  The per-lane program is plain
-control flow::
+Two serving modes share the model-as-batched-primitive machinery:
+
+**Closed-loop** (:meth:`GenerationEngine.generate`): each batch lane owns
+a pre-assigned queue of requests.  The per-lane program is plain control
+flow::
 
     for each request in my queue:          # outer while
         reset cache;                        # masked zeroing
@@ -12,21 +15,37 @@ control flow::
 
 Lanes diverge (different prompt lengths, different stop times, different
 request counts) and the VM executes whichever block the earliest lanes
-wait on, masking the rest — continuous batching falls out of Algorithm 2
-instead of bespoke scheduler code.  Because the whole engine is ONE
+wait on, masking the rest.  Because the whole engine is ONE
 ``lax.while_loop`` program, it compiles end-to-end with XLA: there are no
 host round-trips between tokens (the paper's headline claim, applied to
 serving).
 
-The model's ``decode_step`` enters the program as a single *batched*
+**Open-loop / continuous batching** (:meth:`GenerationEngine.serve`):
+each lane runs ONE request at a time through a single-request program,
+and the VM executes in *segments* (``Stepper``, ``docs/architecture.md``).
+Between segments the host retires finished lanes (streaming their outputs
+to the caller), admits newly-arrived requests from an admission queue,
+and re-initializes free lanes in place with a masked ``inject`` — no
+recompile, no reshape, no loss of in-flight work.  This is
+retire-and-refill: SIMD occupancy no longer collapses as early requests
+finish, and work may arrive while the batch is mid-flight.
+
+Empty prompts are well-defined in both modes: a request with
+``prompt_len == 0`` produces an *empty completion* (zero emitted tokens,
+``length == 0``) — there is no prompt token to condition on, so nothing
+is generated.  Lanes with ``n_req == 0`` produce all-zero outputs.  The
+batched programs and the sequential oracle agree on these semantics.
+
+The model's ``decode_step`` enters the programs as a single *batched*
 primitive; its KV/state cache leaves are ordinary VM variables (the
-program is loop-only, so the VM allocates no stacks for them — paper
+programs are loop-only, so the VM allocates no stacks for them — paper
 optimization iii).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Optional
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,24 +76,75 @@ class EngineConfig:
     # queues, and the VM's dispatch reductions are the only cross-device
     # traffic per token.  ``lanes`` must divide across the mesh.
     mesh: Any = None
+    # Open-loop serving (serve()): VM dispatches per segment between host
+    # admission/retire checks.  Smaller = lower admission latency, more
+    # host round-trips; larger = the opposite.
+    segment_steps: int = 64
 
 
 def _cache_layout(model: Model, window: int):
     """Find each cache leaf's batch axis by differencing two batch sizes."""
     c1 = jax.eval_shape(lambda: model.init_cache(1, window))
     c2 = jax.eval_shape(lambda: model.init_cache(2, window))
-    l1, treedef = jax.tree_util.tree_flatten(c1)
+    leaves1, treedef = jax.tree_util.tree_flatten_with_path(c1)
     l2 = jax.tree_util.tree_flatten(c2)[0]
     axes, member_specs = [], []
-    for a, b in zip(l1, l2):
+    for (path, a), b in zip(leaves1, l2):
         diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
                 if x != y]
-        assert len(diff) == 1, f"ambiguous batch axis for {a.shape}"
+        if len(diff) != 1:
+            leaf = jax.tree_util.keystr(path) or "<root>"
+            raise ValueError(
+                f"ambiguous batch axis for cache leaf {leaf}: shapes "
+                f"{a.shape} (batch=1) vs {b.shape} (batch=2) differ on "
+                f"axes {diff or 'none'}; init_cache must scale exactly one "
+                "axis of every leaf with the batch size"
+            )
         ax = diff[0]
         axes.append(ax)
         shape = a.shape[:ax] + a.shape[ax + 1:]
         member_specs.append(jax.ShapeDtypeStruct(shape, a.dtype))
     return treedef, axes, member_specs
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request for the open-loop serving path."""
+
+    rid: int
+    prompt: np.ndarray  # [<= max_prompt_len] int32 token ids
+    arrival: float = 0.0  # seconds since serve() start
+
+
+@dataclass(frozen=True)
+class Completion:
+    """A finished request, streamed out of :meth:`GenerationEngine.serve`."""
+
+    rid: int
+    tokens: np.ndarray  # [length] int32
+    lane: int
+    arrival: float  # request arrival time
+    admitted: float  # when the request was injected into a lane
+    finished: float  # when the lane was observed retired
+
+    @property
+    def latency(self) -> float:
+        """Arrival-to-finish latency (queueing + service), seconds."""
+        return self.finished - self.arrival
+
+
+@dataclass
+class ServeStats:
+    """Aggregates of one :meth:`GenerationEngine.serve` run."""
+
+    segments: int = 0
+    vm_steps: int = 0
+    completions: int = 0
+    generated_tokens: int = 0
+    wall_time: float = 0.0
+    # Mean fraction of lanes busy per segment (occupancy under refill).
+    occupancy: float = 0.0
+    _occ_acc: float = field(default=0.0, repr=False)
 
 
 class GenerationEngine:
@@ -153,7 +223,6 @@ class GenerationEngine:
             output_specs={"out": out_spec, "olens": olens_spec},
         )
         decode = self._decode_fn()
-        eos = cfg.eos_id
 
         fb.const(np.zeros((cfg.requests_per_lane, cfg.max_new_tokens),
                           np.int32), out="out")
@@ -162,53 +231,127 @@ class GenerationEngine:
         fb.const(0, jnp.int32, out="tok")
         # ---- outer loop over this lane's request queue ----
         with fb.while_(lambda req, n_req: req < n_req, ["req", "n_req"]):
-            # reset per-request state (masked, per-lane)
-            for v, sp in zip(leaf_vars, self.member_specs):
-                fb.const(np.zeros(sp.shape, sp.dtype), out=v)
-            fb.const(0, jnp.int32, out="pos")
-            fb.const(0, jnp.int32, out="t")
             fb.assign("plen", lambda plens, req: plens[req],
                       ["plens", "req"], name="plen")
-            # ---- streaming prefill ----
-            with fb.while_(lambda t, plen: t < plen, ["t", "plen"]):
-                fb.assign("ptok",
-                          lambda prompts, req, t: prompts[req, t],
-                          ["prompts", "req", "t"], name="read_prompt")
-                fb.prim(
-                    decode, ["ptok", "pos", "key", *leaf_vars],
-                    out=("tok", "key", *leaf_vars),
-                    n_out=2 + n_leaves,
-                    name="decode", batched=True, tag="decode",
-                )
-                fb.assign("pos", lambda p: p + 1, ["pos"])
-                fb.assign("t", lambda t: t + 1, ["t"])
-            # ---- generation loop ----
-            fb.const(0, jnp.int32, out="n")
-            fb.const(False, jnp.bool_, out="done")
-            with fb.while_(
-                lambda done, n: jnp.logical_and(
-                    jnp.logical_not(done), n < cfg.max_new_tokens
+            self._emit_request_body(
+                fb, decode, leaf_vars,
+                read_prompt=lambda fb: fb.assign(
+                    "ptok", lambda prompts, req, t: prompts[req, t],
+                    ["prompts", "req", "t"], name="read_prompt",
                 ),
-                ["done", "n"],
-            ):
-                fb.assign(
+                emit_token=lambda fb: fb.assign(
                     "out",
                     lambda out, req, n, tok: out.at[req, n].set(tok),
                     ["out", "req", "n", "tok"], name="emit",
-                )
-                fb.assign("n", lambda n: n + 1, ["n"])
-                fb.assign("done", lambda tok: tok == eos, ["tok"],
-                          name="check_eos")
-                fb.prim(
-                    decode, ["tok", "pos", "key", *leaf_vars],
-                    out=("tok", "key", *leaf_vars),
-                    n_out=2 + n_leaves,
-                    name="decode", batched=True, tag="decode",
-                )
-                fb.assign("pos", lambda p: p + 1, ["pos"])
-            fb.assign("olens", lambda ol, req, n: ol.at[req].set(n),
-                      ["olens", "req", "n"], name="store_len")
+                ),
+                store_length=lambda fb: fb.assign(
+                    "olens", lambda ol, req, n: ol.at[req].set(n),
+                    ["olens", "req", "n"], name="store_len",
+                ),
+            )
             fb.assign("req", lambda r: r + 1, ["req"])
+        fb.return_()
+        pb.add(fb)
+        return pb.build()
+
+    def _emit_request_body(self, fb, decode, leaf_vars, *,
+                           read_prompt, emit_token, store_length) -> None:
+        """Emit the shared per-request control flow into ``fb``.
+
+        Cache reset -> streaming prefill -> generation loop, reading the
+        current prompt length from the ``plen`` variable.  Empty prompts
+        produce empty completions: with no prompt token to condition on,
+        generation never starts (the oracle agrees — see
+        ``reference_generate``).  The closed- and open-loop programs share
+        this body verbatim and differ only in how the prompt is indexed
+        and where tokens/lengths are stored, supplied as emitters so the
+        two serving modes cannot drift apart semantically.
+        """
+        cfg = self.cfg
+        n_leaves = len(self.member_specs)
+        eos = cfg.eos_id
+        # reset per-request state (masked, per-lane)
+        for v, sp in zip(leaf_vars, self.member_specs):
+            fb.const(np.zeros(sp.shape, sp.dtype), out=v)
+        fb.const(0, jnp.int32, out="pos")
+        fb.const(0, jnp.int32, out="t")
+        # ---- streaming prefill ----
+        with fb.while_(lambda t, plen: t < plen, ["t", "plen"]):
+            read_prompt(fb)  # writes "ptok"
+            fb.prim(
+                decode, ["ptok", "pos", "key", *leaf_vars],
+                out=("tok", "key", *leaf_vars),
+                n_out=2 + n_leaves,
+                name="decode", batched=True, tag="decode",
+            )
+            fb.assign("pos", lambda p: p + 1, ["pos"])
+            fb.assign("t", lambda t: t + 1, ["t"])
+        # ---- generation loop ----
+        fb.const(0, jnp.int32, out="n")
+        fb.assign("done", lambda plen: plen == 0, ["plen"],
+                  name="empty_prompt")
+        with fb.while_(
+            lambda done, n: jnp.logical_and(
+                jnp.logical_not(done), n < cfg.max_new_tokens
+            ),
+            ["done", "n"],
+        ):
+            emit_token(fb)  # stores "tok" into the output buffer
+            fb.assign("n", lambda n: n + 1, ["n"])
+            fb.assign("done", lambda tok: tok == eos, ["tok"],
+                      name="check_eos")
+            fb.prim(
+                decode, ["tok", "pos", "key", *leaf_vars],
+                out=("tok", "key", *leaf_vars),
+                n_out=2 + n_leaves,
+                name="decode", batched=True, tag="decode",
+            )
+            fb.assign("pos", lambda p: p + 1, ["pos"])
+        store_length(fb)  # records "n" as this request's length
+
+    def _build_serve_program(self) -> ir.Program:
+        """The open-loop per-lane program: ONE request, start to finish.
+
+        Same prefill + generation control flow as the closed-loop program
+        minus the outer queue loop — under retire-and-refill the "queue"
+        lives on the host, and a lane that reaches the exit block simply
+        waits (parked, masked out of every dispatch) until the host
+        injects its next request.
+        """
+        cfg = self.cfg
+        n_leaves = len(self.member_specs)
+        leaf_vars = [f"cache{i}" for i in range(n_leaves)]
+        pb = frontend.ProgramBuilder(main="serve_one")
+        fb = pb.function(
+            "serve_one",
+            params=["prompt", "plen", "key"],
+            outputs=["out", "olen"],
+            param_specs={
+                "prompt": spec((cfg.max_prompt_len,), jnp.int32),
+                "plen": I32, "key": KEY,
+            },
+            output_specs={
+                "out": spec((cfg.max_new_tokens,), jnp.int32),
+                "olen": I32,
+            },
+        )
+        decode = self._decode_fn()
+
+        fb.const(np.zeros((cfg.max_new_tokens,), np.int32), out="out")
+        fb.const(0, jnp.int32, out="olen")
+        fb.const(0, jnp.int32, out="tok")
+        self._emit_request_body(
+            fb, decode, leaf_vars,
+            read_prompt=lambda fb: fb.assign(
+                "ptok", lambda prompt, t: prompt[t],
+                ["prompt", "t"], name="read_prompt",
+            ),
+            emit_token=lambda fb: fb.assign(
+                "out", lambda out, n, tok: out.at[n].set(tok),
+                ["out", "n", "tok"], name="emit",
+            ),
+            store_length=lambda fb: fb.copy("n", out="olen"),
+        )
         fb.return_()
         pb.add(fb)
         return pb.build()
@@ -238,9 +381,189 @@ class GenerationEngine:
         }
 
     # ------------------------------------------------------------------
+    # Open-loop serving: retire-and-refill continuous batching
+    # ------------------------------------------------------------------
+
+    @property
+    def serve_batched(self) -> batching.AutobatchedFunction:
+        """The single-request program, autobatched (built lazily)."""
+        if getattr(self, "_serve_batched", None) is None:
+            if self.cfg.backend != "pc":
+                raise ValueError(
+                    "open-loop serving needs the resumable pc backend; "
+                    f"got backend={self.cfg.backend!r}"
+                )
+            self._serve_batched = batching.autobatch(
+                self._build_serve_program(),
+                out_spec={"tokens": "out", "lengths": "olen"},
+                backend="pc",
+                batch_size=self.cfg.lanes,
+                max_depth=4,
+                max_steps=2 ** 31 - 2,  # a server's step count is unbounded
+                mesh=self.cfg.mesh,
+            )
+        return self._serve_batched
+
+    def serve(
+        self,
+        requests: list[Request],
+        *,
+        segment_steps: Optional[int] = None,
+        seed: int = 0,
+        now_fn: Optional[Callable[[], float]] = None,
+        on_finish: Optional[Callable[[Completion], None]] = None,
+    ) -> tuple[list[Completion], ServeStats]:
+        """Serve an open-loop request stream with live refill.
+
+        Runs the single-request program in VM segments of
+        ``segment_steps`` dispatches.  Between segments the host:
+
+        1. **retires** — reads per-lane halt flags, streams each finished
+           lane's tokens out as a :class:`Completion` (via ``on_finish``
+           the moment it is observed), and returns the lane to the free
+           pool;
+        2. **admits** — pops requests whose ``arrival`` time has passed
+           off the queue and injects them into free lanes with a masked
+           in-place re-initialization (in-flight lanes are untouched).
+
+        ``now_fn`` supplies the clock (seconds since serve start);
+        defaults to wall time, pass ``lambda: 0.0``-style closures for
+        deterministic tests.  Completions are returned sorted by request
+        id; per-request latency (arrival -> finish) is on each completion.
+        """
+        cfg = self.cfg
+        z = cfg.lanes
+        seg = (cfg.segment_steps if segment_steps is None
+               else int(segment_steps))
+        if seg < 1:
+            raise ValueError(f"segment_steps must be >= 1, got {seg}")
+        pend = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        for r in pend:
+            if len(r.prompt) > cfg.max_prompt_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} "
+                    f"exceeds max_prompt_len={cfg.max_prompt_len}"
+                )
+
+        st = self.serve_batched.stepper(
+            jnp.zeros((z, cfg.max_prompt_len), jnp.int32),
+            jnp.zeros((z,), jnp.int32),
+            jnp.zeros((z, 2), jnp.uint32),
+        )
+        state = st.init()
+        state = st.park(state, np.ones((z,), bool))
+
+        t0 = time.perf_counter()
+        now = now_fn if now_fn is not None else (
+            lambda: time.perf_counter() - t0
+        )
+        free = list(range(z))[::-1]  # pop() from lane 0 up
+        active: dict[int, tuple[Request, float]] = {}
+        completions: list[Completion] = []
+        stats = ServeStats()
+
+        prompts_buf = np.zeros((z, cfg.max_prompt_len), np.int32)
+        plens_buf = np.zeros((z,), np.int32)
+        keys_buf = np.zeros((z, 2), np.uint32)
+        idle_spins = 0
+        max_steps_budget = st.vm.config.max_steps
+
+        while pend or active:
+            # ---- admit: arrived requests -> free lanes (masked inject) --
+            mask = np.zeros((z,), bool)
+            t_now = now()
+            while pend and free and pend[0].arrival <= t_now:
+                r = pend.pop(0)
+                lane = free.pop()
+                p = np.asarray(r.prompt, np.int32).reshape(-1)
+                prompts_buf[lane] = 0
+                prompts_buf[lane, : len(p)] = p
+                plens_buf[lane] = len(p)
+                keys_buf[lane] = np.asarray(
+                    jax.random.PRNGKey(seed + r.rid), np.uint32
+                )
+                mask[lane] = True
+                active[lane] = (r, t_now)
+            if mask.any():
+                state = st.inject(
+                    state, mask,
+                    jnp.asarray(prompts_buf), jnp.asarray(plens_buf),
+                    jnp.asarray(keys_buf),
+                )
+            if not active:
+                # Every lane idle and the next arrival is in the future:
+                # yield the host briefly instead of spinning.
+                if pend and now_fn is None:
+                    time.sleep(min(max(pend[0].arrival - now(), 0.0), 0.01))
+                elif pend:
+                    idle_spins += 1
+                    if idle_spins > 1_000_000:
+                        raise RuntimeError(
+                            "serve(): all lanes idle but the now_fn clock "
+                            f"never reaches the next arrival "
+                            f"({pend[0].arrival}); supply an advancing "
+                            "clock"
+                        )
+                continue
+            idle_spins = 0
+
+            # ---- one VM segment -------------------------------------
+            state = st.step(state, seg)
+            stats.segments += 1
+            stats._occ_acc += len(active) / z
+            if st.steps(state) >= max_steps_budget:
+                # The VM's cumulative step budget is spent: further
+                # segments would be silent no-ops and active lanes could
+                # never retire.  Fail loudly instead of spinning.
+                raise RuntimeError(
+                    f"serve(): VM step budget exhausted "
+                    f"({max_steps_budget} steps) with {len(active)} "
+                    f"request(s) still in flight; raise the engine "
+                    "program's max_steps"
+                )
+
+            # ---- retire: stream finished lanes, free them -----------
+            done = np.asarray(jax.device_get(st.lane_done(state)))
+            finished = [lane for lane in active if done[lane]]
+            if finished:
+                outs = st.outputs(state)
+                tokens = np.asarray(jax.device_get(outs["tokens"]))
+                lengths = np.asarray(jax.device_get(outs["lengths"]))
+                t_fin = now()
+                for lane in finished:
+                    r, t_admit = active.pop(lane)
+                    comp = Completion(
+                        rid=r.rid,
+                        tokens=tokens[lane, : int(lengths[lane])].copy(),
+                        lane=lane,
+                        arrival=r.arrival,
+                        admitted=t_admit,
+                        finished=t_fin,
+                    )
+                    completions.append(comp)
+                    stats.generated_tokens += int(lengths[lane])
+                    free.append(lane)
+                    if on_finish is not None:
+                        on_finish(comp)
+
+        stats.vm_steps = st.steps(state)
+        stats.completions = len(completions)
+        stats.wall_time = time.perf_counter() - t0
+        stats.occupancy = (
+            stats._occ_acc / stats.segments if stats.segments else 0.0
+        )
+        completions.sort(key=lambda c: c.rid)
+        return completions, stats
+
+    # ------------------------------------------------------------------
 
     def reference_generate(self, prompts, prompt_lens, n_req=None) -> dict:
-        """Oracle: plain python loop, one lane at a time (greedy only)."""
+        """Oracle: plain python loop, one lane at a time (greedy only).
+
+        Matches the batched programs' edge-case semantics: a zero-length
+        prompt yields an empty completion (no tokens, length 0), and a
+        lane with ``n_req == 0`` yields all-zero outputs.
+        """
         cfg = self.cfg
         assert cfg.temperature == 0.0, "oracle supports greedy only"
         z = cfg.lanes
@@ -254,9 +577,10 @@ class GenerationEngine:
         olens = np.zeros((z, cfg.requests_per_lane), np.int32)
         for lane in range(z):
             for r in range(int(n_req[lane])):
+                if int(prompt_lens[lane, r]) == 0:
+                    continue  # empty prompt => empty completion
                 cache = self.model.init_cache(1, cfg.max_context)
                 pos = 0
-                tok = None
                 for t in range(int(prompt_lens[lane, r])):
                     logits, cache = step(
                         self.params, cache,

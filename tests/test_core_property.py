@@ -12,11 +12,30 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis "
-                    "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # randomized tests skip; deterministic ones still run
+    HAVE_HYPOTHESIS = False
 
-from repro.core import api, frontend
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="needs hypothesis (pip install -r "
+                "requirements-dev.txt)"
+            )(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+from repro.core import api, batching, frontend
 from repro.core.frontend import I32
 
 # Small, wrap-safe int arithmetic (identical semantics in np/jnp int32).
@@ -198,6 +217,113 @@ def test_mesh_schedule_fuse_matrix_matches_reference(seed, inputs):
                 np.asarray(got), np.asarray(ref),
                 err_msg=f"pc[{schedule},fuse={fuse},mesh=2] != reference",
             )
+
+
+@pytest.mark.parametrize("seed,seg", [(0, 1), (1, 3), (2, 7), (3, 64)])
+def test_segmented_matches_single_shot_matrix(seed, seg):
+    """Segmented execution (the ISSUE 5 resumable-VM contract) is bit-exact
+    with single-shot for every schedule x fuse x mesh combination: chaining
+    ``stepper.step(state, seg)`` segments of any size yields identical
+    outputs AND an identical step count on random recursive CFG programs.
+
+    Deterministic (seeded) rather than hypothesis-driven so the matrix
+    always runs; the program generator is the same ``_Gen``."""
+    import jax
+
+    rng = np.random.default_rng(seed)
+    prog = _Gen(rng).build()
+    pairs = [(int(rng.integers(0, 5)), int(rng.integers(-50, 51)))
+             for _ in range(4)]
+    n = np.array([i[0] for i in pairs], np.int32)
+    x = np.array([i[1] for i in pairs], np.int32)
+    meshes = [None] + ([2] if jax.device_count() >= 2 else [])
+    for mesh in meshes:
+        for schedule in ("earliest", "popular", "sweep"):
+            for fuse in (False, True):
+                fn = batching.autobatch(
+                    prog, backend="pc", max_depth=64, max_steps=200_000,
+                    schedule=schedule, fuse=fuse, mesh=mesh,
+                )
+                single = np.asarray(fn(n, x)["out"])
+                single_steps = int(fn.last_result.steps)
+                st_ = fn.stepper(n, x)
+                state = st_.init()
+                budget = 0
+                while not st_.done(state):
+                    state = st_.step(state, seg)
+                    budget += 1
+                    assert budget < 200_000
+                tag = f"pc[{schedule},fuse={fuse},mesh={mesh},seg={seg}]"
+                np.testing.assert_array_equal(
+                    np.asarray(st_.result(state)["out"]), single,
+                    err_msg=f"{tag} outputs != single-shot",
+                )
+                assert st_.steps(state) == single_steps, (
+                    f"{tag}: segmented step count {st_.steps(state)} != "
+                    f"single-shot {single_steps}"
+                )
+
+
+def _deep_program():
+    """Unbounded-depth recursion: overflows any small max_depth for n>=d."""
+    pb = frontend.ProgramBuilder()
+    fb = pb.function("deep", ["n"], ["out"], {"n": I32}, {"out": I32})
+    c = fb.prim(lambda n: n <= 0, ["n"], name="base")
+    with fb.if_(c):
+        fb.copy("n", out="out")
+        fb.return_()
+    t = fb.prim(lambda n: n - 1, ["n"], name="dec")
+    fb.assign("out", lambda r: r, [fb.call("deep", [t])])
+    fb.return_()
+    pb.add(fb)
+    return pb.build()
+
+
+@pytest.mark.parametrize("mesh", [None, 2])
+def test_depth_exceeded_flags_under_mesh(mesh):
+    """Per-member overflow flags are reported identically sharded and
+    unsharded (contained semantics of the legacy shim): exactly the
+    members whose recursion exceeds max_depth are flagged, and the
+    non-overflowing members' results stay exact."""
+    import jax
+
+    if mesh and jax.device_count() < mesh:
+        pytest.skip("needs >= 2 devices (see tests/conftest.py)")
+    prog = _deep_program()
+    n = np.array([9, 0, 1, 8], np.int32)  # depth 9/0/1/8 vs max_depth=4
+    with pytest.warns(DeprecationWarning):
+        bp = api.autobatch(prog, 4, backend="pc", max_depth=4, mesh=mesh)
+    out = bp({"n": n})
+    flags = np.asarray(bp.last_result.depth_exceeded)
+    np.testing.assert_array_equal(flags, [True, False, False, True])
+    np.testing.assert_array_equal(np.asarray(out["out"])[~flags], [0, 0])
+
+
+@pytest.mark.parametrize("mesh", [None, 2])
+def test_stack_overflow_raised_from_segmented_run(mesh):
+    """StackOverflow reporting survives mesh sharding on the segmented
+    path too: stepper.result() raises with max_depth guidance while the
+    per-lane flags stay inspectable via stepper.depth_exceeded()."""
+    import jax
+
+    from repro.core import pc_vm
+
+    if mesh and jax.device_count() < mesh:
+        pytest.skip("needs >= 2 devices (see tests/conftest.py)")
+    fn = batching.autobatch(
+        _deep_program(), backend="pc", max_depth=4, mesh=mesh
+    )
+    n = np.array([9, 0], np.int32)
+    st_ = fn.stepper(n)
+    state = st_.init()
+    while not st_.done(state):
+        state = st_.step(state, 16)
+    flags = np.asarray(st_.depth_exceeded(state))
+    np.testing.assert_array_equal(flags, [True, False])
+    with pytest.raises(pc_vm.StackOverflow, match="max_depth"):
+        st_.result(state)
+    with pytest.raises(pc_vm.StackOverflow, match="max_depth"):
+        fn(n)
 
 
 @settings(max_examples=15, deadline=None)

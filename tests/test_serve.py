@@ -1,5 +1,7 @@
 """Serving tests: VM-scheduled engine vs sequential oracle, prefill step,
-divergent lanes (prompt lengths, queue depths, EOS times)."""
+divergent lanes (prompt lengths, queue depths, EOS times), edge-case
+semantics (empty prompts, empty queues), and open-loop continuous
+batching (retire-and-refill)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -8,7 +10,13 @@ import pytest
 from repro import configs
 from repro.configs.base import ShapeSpec
 from repro.models import get_model
-from repro.serve.engine import EngineConfig, GenerationEngine
+from repro.serve.engine import (
+    Completion,
+    EngineConfig,
+    GenerationEngine,
+    Request,
+    _cache_layout,
+)
 from repro.serve.steps import decode_cache_window, make_prefill_step, \
     make_serve_step
 
@@ -79,6 +87,218 @@ class TestVMEngine:
         )
         eng = GenerationEngine(m, params, ecfg)
         assert eng.batched.lowered.stack_vars == frozenset()
+
+    def test_empty_prompts_match_oracle(self, small_lm):
+        """Zero-length prompts produce empty completions — batched path
+        and oracle agree (regression: the oracle used to crash on an
+        unbound ``logits``)."""
+        m, params = small_lm
+        ecfg = EngineConfig(
+            lanes=3, max_context=32, max_prompt_len=5, max_new_tokens=6,
+            requests_per_lane=2, eos_id=0, backend="pc",
+        )
+        eng = GenerationEngine(m, params, ecfg)
+        rng = np.random.default_rng(3)
+        prompts = rng.integers(1, m.cfg.vocab_size, (3, 2, 5)).astype(np.int32)
+        # Empty prompts in every position: first, last, and a whole lane.
+        plens = np.array([[0, 3], [2, 0], [0, 0]], np.int32)
+        res = eng.generate(prompts, plens)
+        ref = eng.reference_generate(prompts, plens)
+        np.testing.assert_array_equal(res["tokens"], ref["tokens"])
+        np.testing.assert_array_equal(res["lengths"], ref["lengths"])
+        # The semantics, explicitly: empty prompt => no tokens emitted.
+        assert res["lengths"][0, 0] == 0
+        assert (res["tokens"][2] == 0).all() and (res["lengths"][2] == 0).all()
+
+    def test_zero_request_lanes_match_oracle(self, small_lm):
+        """Lanes with n_req == 0 (empty queues) stay all-zero in both the
+        batched path and the oracle, including n_req == 0 everywhere."""
+        m, params = small_lm
+        ecfg = EngineConfig(
+            lanes=2, max_context=32, max_prompt_len=4, max_new_tokens=4,
+            requests_per_lane=2, eos_id=0, backend="pc",
+        )
+        eng = GenerationEngine(m, params, ecfg)
+        rng = np.random.default_rng(4)
+        prompts = rng.integers(1, m.cfg.vocab_size, (2, 2, 4)).astype(np.int32)
+        plens = rng.integers(1, 5, (2, 2)).astype(np.int32)
+        for n_req in (np.array([2, 0], np.int32), np.zeros(2, np.int32)):
+            res = eng.generate(prompts, plens, n_req=n_req)
+            ref = eng.reference_generate(prompts, plens, n_req=n_req)
+            np.testing.assert_array_equal(res["tokens"], ref["tokens"])
+            np.testing.assert_array_equal(res["lengths"], ref["lengths"])
+            for lane in np.flatnonzero(n_req == 0):
+                assert (res["tokens"][lane] == 0).all()
+                assert (res["lengths"][lane] == 0).all()
+
+
+class TestCacheLayout:
+    def test_ambiguous_leaf_raises_value_error(self):
+        """_cache_layout names the offending leaf in a ValueError instead
+        of an assert (asserts vanish under ``python -O``)."""
+
+        class BadModel:
+            def init_cache(self, batch, window):
+                # 'k' is fine; 'v' scales two axes with the batch size.
+                return {
+                    "k": jnp.zeros((batch, window)),
+                    "v": jnp.zeros((batch, batch + 1)),
+                }
+
+        with pytest.raises(ValueError, match=r"\['v'\]"):
+            _cache_layout(BadModel(), 4)
+
+    def test_batch_independent_leaf_raises_value_error(self):
+        class ConstModel:
+            def init_cache(self, batch, window):
+                return {"scale": jnp.zeros((window,))}
+
+        with pytest.raises(ValueError, match="scale"):
+            _cache_layout(ConstModel(), 4)
+
+
+class TestContinuousServe:
+    """Open-loop serving: retire-and-refill over the segmented VM."""
+
+    def _engine(self, small_lm, lanes=2, segment_steps=8, **kw):
+        m, params = small_lm
+        ecfg = EngineConfig(
+            lanes=lanes, max_context=32, max_prompt_len=5, max_new_tokens=6,
+            requests_per_lane=1, eos_id=0, backend="pc",
+            segment_steps=segment_steps, **kw,
+        )
+        return m, GenerationEngine(m, params, ecfg)
+
+    def _oracle(self, m, params, requests, max_new=6):
+        """Per-request greedy oracle via reference_generate, one lane each."""
+        z = len(requests)
+        ocfg = EngineConfig(
+            lanes=z, max_context=32, max_prompt_len=5, max_new_tokens=max_new,
+            requests_per_lane=1, eos_id=0,
+        )
+        oeng = GenerationEngine.__new__(GenerationEngine)
+        oeng.model, oeng.params, oeng.cfg = m, params, ocfg
+        prompts = np.zeros((z, 1, 5), np.int32)
+        plens = np.zeros((z, 1), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, 0, : len(r.prompt)] = r.prompt
+            plens[i, 0] = len(r.prompt)
+        return oeng.reference_generate(prompts, plens)
+
+    def test_more_requests_than_lanes_matches_oracle(self, small_lm):
+        """5 requests through 2 lanes: every completion's tokens match the
+        sequential oracle bit-for-bit — refill does not perturb decoding."""
+        m, eng = self._engine(small_lm, lanes=2)
+        rng = np.random.default_rng(5)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(
+                1, m.cfg.vocab_size, (1 + i % 5,)).astype(np.int32))
+            for i in range(5)
+        ]
+        comps, stats = eng.serve(reqs)
+        assert [c.rid for c in comps] == [0, 1, 2, 3, 4]
+        ref = self._oracle(m, eng.params, reqs)
+        for c in comps:
+            expect = ref["tokens"][c.rid, 0, : ref["lengths"][c.rid, 0]]
+            np.testing.assert_array_equal(c.tokens, expect)
+        assert stats.completions == 5
+        assert stats.generated_tokens == int(ref["lengths"].sum())
+        assert 0.0 < stats.occupancy <= 1.0
+
+    def test_streaming_and_lane_reuse(self, small_lm):
+        """Completions stream via on_finish as lanes retire, and lanes are
+        actually reused (more requests than lanes, bounded lane ids)."""
+        m, eng = self._engine(small_lm, lanes=2, segment_steps=4)
+        rng = np.random.default_rng(6)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(
+                1, m.cfg.vocab_size, (3,)).astype(np.int32))
+            for i in range(4)
+        ]
+        streamed = []
+        comps, _ = eng.serve(reqs, on_finish=streamed.append)
+        assert len(streamed) == 4
+        assert all(isinstance(c, Completion) for c in streamed)
+        assert {c.lane for c in comps} <= {0, 1}
+        # Streaming happened in retire order, which respects admission:
+        # the first two admitted requests finish before the last one.
+        assert streamed[-1].admitted >= streamed[0].admitted
+
+    def test_empty_prompt_request(self, small_lm):
+        """An empty prompt is a legal request: empty completion, lane is
+        freed for the next request."""
+        m, eng = self._engine(small_lm, lanes=1)
+        rng = np.random.default_rng(7)
+        reqs = [
+            Request(rid=0, prompt=np.zeros((0,), np.int32)),
+            Request(rid=1, prompt=rng.integers(
+                1, m.cfg.vocab_size, (2,)).astype(np.int32)),
+        ]
+        comps, stats = eng.serve(reqs)
+        assert comps[0].tokens.size == 0
+        assert comps[1].tokens.size > 0
+        assert stats.completions == 2
+
+    def test_late_arrivals_with_virtual_clock(self, small_lm):
+        """Requests admitted only once their arrival time has passed, on a
+        caller-supplied clock: work genuinely arrives mid-flight."""
+        m, eng = self._engine(small_lm, lanes=2, segment_steps=4)
+        rng = np.random.default_rng(8)
+        reqs = [
+            Request(rid=0, prompt=rng.integers(
+                1, m.cfg.vocab_size, (3,)).astype(np.int32), arrival=0.0),
+            Request(rid=1, prompt=rng.integers(
+                1, m.cfg.vocab_size, (2,)).astype(np.int32), arrival=2.0),
+        ]
+        # Virtual clock: one tick per call — arrival 2.0 is admitted only
+        # after a couple of segments have already run.
+        t = {"now": 0.0}
+
+        def clock():
+            t["now"] += 1.0
+            return t["now"]
+
+        comps, _ = eng.serve(reqs, now_fn=clock)
+        assert [c.rid for c in comps] == [0, 1]
+        assert comps[1].admitted >= 2.0
+        ref = self._oracle(m, eng.params, reqs)
+        for c in comps:
+            expect = ref["tokens"][c.rid, 0, : ref["lengths"][c.rid, 0]]
+            np.testing.assert_array_equal(c.tokens, expect)
+
+    def test_sharded_serve_matches_unsharded(self, small_lm):
+        """Retire-and-refill composes with lane sharding: injecting into a
+        mesh-sharded snapshot yields the same per-request tokens."""
+        if jax.device_count() < 2:
+            pytest.skip("needs >= 2 devices (see tests/conftest.py)")
+        m, eng = self._engine(small_lm, lanes=2, mesh=2)
+        _, eng0 = self._engine(small_lm, lanes=2)
+        rng = np.random.default_rng(9)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(
+                1, m.cfg.vocab_size, (1 + i % 5,)).astype(np.int32))
+            for i in range(4)
+        ]
+        comps, _ = eng.serve(reqs)
+        comps0, _ = eng0.serve(reqs)
+        for a, b in zip(comps, comps0):
+            assert a.rid == b.rid
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_rejects_oversized_prompt(self, small_lm):
+        _, eng = self._engine(small_lm, lanes=1)
+        with pytest.raises(ValueError, match="max_prompt_len"):
+            eng.serve([Request(rid=0, prompt=np.ones((9,), np.int32))])
+
+    def test_serve_requires_pc_backend(self, small_lm):
+        m, params = small_lm
+        ecfg = EngineConfig(
+            lanes=1, max_context=16, max_prompt_len=4, max_new_tokens=2,
+            requests_per_lane=1, backend="local",
+        )
+        eng = GenerationEngine(m, params, ecfg)
+        with pytest.raises(ValueError, match="pc backend"):
+            eng.serve([Request(rid=0, prompt=np.ones((2,), np.int32))])
 
 
 class TestServeSteps:

@@ -1,0 +1,142 @@
+"""Stepper API tests: segmented execution as a first-class surface of
+``batching.autobatch`` — state-in/state-out, cache sharing with plain
+calls, masked inject/park, and snapshot introspection.
+
+The schedule x fuse x mesh bit-exactness *matrix* lives in
+``tests/test_core_property.py``; these tests pin the API contract on a
+single well-understood program (fib)."""
+import numpy as np
+import pytest
+
+from repro.core import batching
+from tests.test_core import build_fib, FIB
+
+
+@pytest.fixture(scope="module")
+def fib_fn():
+    return batching.autobatch(build_fib(), backend="pc", max_depth=24)
+
+
+class TestStepperBasics:
+    def test_segments_match_single_shot(self, fib_fn):
+        n = np.array([0, 3, 7, 11], np.int32)
+        single = np.asarray(fib_fn(n)["out"])
+        st = fib_fn.stepper(n)
+        state = st.init()
+        hops = 0
+        while not st.done(state):
+            state = st.step(state, 5)
+            hops += 1
+            assert hops < 10_000
+        np.testing.assert_array_equal(np.asarray(st.result(state)["out"]),
+                                      single)
+        assert hops > 1  # actually exercised multiple segments
+        assert st.steps(state) == int(fib_fn.last_result.steps)
+
+    def test_stepper_shares_executor_cache(self, fib_fn):
+        """stepper() is cache-keyed like lower(): no second VM is built
+        for a batch size that already has an executor."""
+        n = np.array([1, 2, 3, 4], np.int32)
+        fib_fn(n)
+        before = fib_fn.cache_info()
+        st = fib_fn.stepper(n)
+        after = fib_fn.cache_info()
+        assert (before.lowerings, before.traces) == \
+            (after.lowerings, after.traces)
+        assert st.vm is fib_fn._executor(4).vm
+
+    def test_lane_done_and_outputs_mid_flight(self, fib_fn):
+        """lane_done flips per lane as it halts; a halted lane's output
+        row is final even while other lanes are still running."""
+        n = np.array([0, 11], np.int32)  # lane 0 trivial, lane 1 deep
+        st = fib_fn.stepper(n)
+        state = st.init()
+        state = st.step(state, 3)  # enough for fib(0), nowhere near fib(11)
+        done = np.asarray(st.lane_done(state))
+        assert done[0] and not done[1]
+        assert np.asarray(st.outputs(state)["out"])[0] == FIB[0]
+        while not st.done(state):
+            state = st.step(state, 64)
+        np.testing.assert_array_equal(np.asarray(st.outputs(state)["out"]),
+                                      FIB[n])
+
+    def test_done_when_max_steps_exhausted(self):
+        """done() flips once the max_steps budget is spent, exactly when a
+        single-shot call would return (converged=False) — the drive loop
+        must not hang on a lane that cannot halt within budget."""
+        fn = batching.autobatch(build_fib(), backend="pc", max_depth=24,
+                                max_steps=5)
+        st = fn.stepper(np.array([11, 11], np.int32))
+        state = st.init()
+        hops = 0
+        while not st.done(state):
+            state = st.step(state, 3)
+            hops += 1
+            assert hops < 100
+        assert st.steps(state) == 5
+        assert not np.asarray(st.lane_done(state)).any()  # budget, not halt
+
+    def test_requires_pc_backend(self):
+        fn = batching.autobatch(build_fib(), backend="local")
+        with pytest.raises(ValueError, match="pc"):
+            fn.stepper(np.array([1, 2], np.int32))
+
+    def test_init_rebinds_values(self, fib_fn):
+        st = fib_fn.stepper(np.array([1, 2, 3, 4], np.int32))
+        state = st.init(np.array([5, 6, 7, 8], np.int32))
+        while not st.done(state):
+            state = st.step(state, 64)
+        np.testing.assert_array_equal(
+            np.asarray(st.outputs(state)["out"]), FIB[[5, 6, 7, 8]]
+        )
+
+    def test_batch_size_mismatch_raises(self, fib_fn):
+        st = fib_fn.stepper(np.array([1, 2, 3, 4], np.int32))
+        with pytest.raises(TypeError, match="batch"):
+            st.init(np.array([1, 2], np.int32))
+
+
+class TestInjectAndPark:
+    def test_inject_reinitializes_masked_lanes_only(self, fib_fn):
+        n = np.array([2, 9, 4, 6], np.int32)
+        st = fib_fn.stepper(n)
+        state = st.init()
+        while not st.done(state):
+            state = st.step(state, 32)
+        mask = np.array([True, False, True, False])
+        state = st.inject(state, mask,
+                          np.array([10, 0, 8, 0], np.int32))
+        done = np.asarray(st.lane_done(state))
+        np.testing.assert_array_equal(done, ~mask)  # injected lanes re-arm
+        while not st.done(state):
+            state = st.step(state, 32)
+        np.testing.assert_array_equal(
+            np.asarray(st.outputs(state)["out"]), FIB[[10, 9, 8, 6]]
+        )
+
+    def test_park_idles_lanes(self, fib_fn):
+        n = np.array([7, 7, 7, 7], np.int32)
+        st = fib_fn.stepper(n)
+        state = st.init()
+        state = st.park(state, np.array([True, True, True, True]))
+        assert st.done(state)
+        assert st.steps(state) == 0  # parked lanes never dispatch
+        # Refill two parked lanes and only they run.
+        state = st.inject(state, np.array([True, False, True, False]),
+                          np.array([3, 0, 5, 0], np.int32))
+        while not st.done(state):
+            state = st.step(state, 64)
+        out = np.asarray(st.outputs(state)["out"])
+        assert out[0] == FIB[3] and out[2] == FIB[5]
+
+    def test_steps_accumulate_across_inject(self, fib_fn):
+        n = np.array([3, 3, 3, 3], np.int32)
+        st = fib_fn.stepper(n)
+        state = st.init()
+        while not st.done(state):
+            state = st.step(state, 64)
+        first = st.steps(state)
+        state = st.inject(state, np.ones(4, bool), n)
+        while not st.done(state):
+            state = st.step(state, 64)
+        assert st.steps(state) == 2 * first
