@@ -72,6 +72,7 @@ def throughput_sweep(
     pc_variants: tuple = DEFAULT_PC_VARIANTS,
     unbatched_cap: int = 8,
     per_device_batch: bool = False,
+    verify: bool = False,
 ) -> tuple[Table, list[dict]]:
     """Run the sweep; returns the rendered table and JSON-able records."""
     target = targets.logistic_regression(num_data=num_data, dim=dim)
@@ -108,7 +109,7 @@ def throughput_sweep(
     for name, (sched, fz, mesh) in pc_meta.items():
         kernels[name] = nuts.make_nuts_kernel(
             target, settings, backend="pc", max_steps=500_000,
-            schedule=sched, fuse=fz, mesh=mesh,
+            schedule=sched, fuse=fz, mesh=mesh, verify=verify,
         )
     for arm in ("local", "local_eager"):
         if arm in arms:
@@ -258,6 +259,10 @@ def main(argv=None) -> int:
                     help="treat --batches as per-device: mesh arms scale "
                          "their total batch by the device count "
                          "(weak scaling)")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the lowered-IR verifier between every "
+                         "lowering/fusion pass of the pc arms (sanity at "
+                         "benchmark scale; excluded from timed regions)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results (BENCH_fig5.json)")
     args = ap.parse_args(argv)
@@ -273,7 +278,7 @@ def main(argv=None) -> int:
     pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh)
     tab, records = throughput_sweep(
         batches, repeats=args.repeats, pc_variants=pc_variants,
-        per_device_batch=args.per_device_batch, **kw
+        per_device_batch=args.per_device_batch, verify=args.verify, **kw
     )
     print(tab.render())
     if args.json:

@@ -16,6 +16,19 @@ import numpy as np
 from repro.mcmc import nuts, targets
 
 
+def build_program(dim: int = 20, num_data: int = 1_000):
+    """The recursive NUTS ir.Program this example runs (small default).
+
+    Module-level factory so static tooling can analyze the exact program:
+    ``python tools/irlint.py examples/nuts_logreg.py:build_program``.
+    """
+    target = targets.logistic_regression(num_data=num_data, dim=dim)
+    settings = nuts.NutsSettings(
+        max_tree_depth=8, num_steps=20, steps_per_leaf=4
+    )
+    return nuts.build_nuts_program(target, settings)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--chains", type=int, default=32)

@@ -11,6 +11,10 @@ callable over positional pytree arguments:
 * outputs come back as pytrees;
 * compiled artifacts are cached per `(backend, batch_size, input avals)`,
   and the pc backend's stack-explicit lowering is shared across batch sizes.
+
+The decorated handles (`fib`, `collatz`) live at module level so tools can
+import and inspect them — `python tools/irlint.py examples/quickstart.py:fib`
+runs the lowered-IR verifier and static analyses over them.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -21,6 +25,7 @@ from repro.core.frontend import F32, I32
 
 # ---------------------------------------------------------------------------
 # 1. Decorate restricted Python — recursion and all — and call it batched.
+#    fib is recursive, so the stack depth has no static bound: pass one.
 # ---------------------------------------------------------------------------
 
 
@@ -31,14 +36,11 @@ def fib(n):
     return fib(n - 1) + fib(n - 2)
 
 
-n = np.array([0, 1, 5, 9, 12, 3, 7, 2], np.int32)
-print("fib(n)  =", np.asarray(fib(n)))
-print("VM steps:", int(fib.last_result.steps),
-      "(8 divergent recursions, one fused XLA loop)")
-
 # ---------------------------------------------------------------------------
 # 2. The builder frontend feeds the same API: Collatz trajectory length.
 #    Shared(step) shows a broadcast constant; the output is a pytree.
+#    collatz is loop-only (non-recursive): max_depth defaults to the
+#    statically inferred bound — no stack sizing to guess.
 # ---------------------------------------------------------------------------
 pb = frontend.ProgramBuilder()
 fb = pb.function(
@@ -65,20 +67,36 @@ collatz = autobatch(
     out_spec={"steps": "steps", "peak": "peak"},
     backend="pc",
 )
-out = collatz(np.array([1, 6, 7, 27, 97, 871], np.int32), np.int32(1000))
-print("collatz =", np.asarray(out["steps"]), "(expect 0 8 16 111 118 178)")
-print("peaks   =", np.asarray(out["peak"]))
 
-# ---------------------------------------------------------------------------
-# 3. One decorated function, four backends, shared compilation cache.
-# ---------------------------------------------------------------------------
-for backend in ("pc", "local", "local_eager", "reference"):
-    bp = autobatch(fib.program, backend=backend, max_depth=24)
-    res = bp(np.array([10] * 8, np.int32))
-    print(f"{backend:12s} fib(10) -> {np.asarray(res['out'])[0]}")
 
-# Calling again at the same avals is a pure cache hit (no re-trace,
-# no re-lower, no re-compile); a new batch size reuses the lowering.
-fib(n)
-fib(np.array([4, 5, 6, 7], np.int32))
-print("cache:", fib.cache_info())
+def main():
+    n = np.array([0, 1, 5, 9, 12, 3, 7, 2], np.int32)
+    print("fib(n)  =", np.asarray(fib(n)))
+    print("VM steps:", int(fib.last_result.steps),
+          "(8 divergent recursions, one fused XLA loop)")
+
+    out = collatz(np.array([1, 6, 7, 27, 97, 871], np.int32), np.int32(1000))
+    print("collatz =", np.asarray(out["steps"]), "(expect 0 8 16 111 118 178)")
+    print("peaks   =", np.asarray(out["peak"]))
+
+    # -----------------------------------------------------------------------
+    # 3. One decorated function, four backends, shared compilation cache.
+    # -----------------------------------------------------------------------
+    for backend in ("pc", "local", "local_eager", "reference"):
+        bp = autobatch(fib.program, backend=backend, max_depth=24)
+        res = bp(np.array([10] * 8, np.int32))
+        print(f"{backend:12s} fib(10) -> {np.asarray(res['out'])[0]}")
+
+    # Calling again at the same avals is a pure cache hit (no re-trace,
+    # no re-lower, no re-compile); a new batch size reuses the lowering.
+    fib(n)
+    fib(np.array([4, 5, 6, 7], np.int32))
+    print("cache:", fib.cache_info())
+
+    # What did the compiler do?  diagnostics() runs the lowered-IR
+    # verifier + static analyses (tools/irlint.py prints the same report).
+    print(collatz.diagnostics().pretty())
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,9 @@
 
 Source IR (Fig. 2) -> lowering with the five compiler optimizations ->
 either the host-recursive local-static interpreter (Algorithm 1) or the
-fully-compiled program-counter VM (Algorithm 2).
+fully-compiled program-counter VM (Algorithm 2).  Every lowered-IR
+transform runs as a pass in :mod:`passes`, with executable invariants in
+:mod:`verifier`.
 """
 from . import (
     analysis,
@@ -10,16 +12,21 @@ from . import (
     ast_frontend,
     batching,
     frontend,
+    fusion,
     ir,
     local_static,
     lowering,
+    passes,
     pc_vm,
     reference,
+    verifier,
 )
 from .api import BatchedProgram
 from .ast_frontend import Namespace
 from .batching import AutobatchedFunction, Batched, Shared, autobatch
 from .frontend import BOOL, F32, I32, FunctionBuilder, ProgramBuilder, spec
+from .passes import PassError, PassPipeline
+from .verifier import VerificationError, verify
 
 __all__ = [
     "analysis",
@@ -34,14 +41,21 @@ __all__ = [
     "F32",
     "frontend",
     "FunctionBuilder",
+    "fusion",
     "I32",
     "ir",
     "local_static",
     "lowering",
     "Namespace",
+    "PassError",
+    "passes",
+    "PassPipeline",
     "pc_vm",
     "ProgramBuilder",
     "reference",
     "Shared",
     "spec",
+    "VerificationError",
+    "verifier",
+    "verify",
 ]

@@ -1,15 +1,22 @@
-"""Static analyses over the source IR: liveness, call graph, type inference.
+"""Static analyses over the source and lowered IRs.
 
-These drive the paper's five lowering optimizations:
+Source-IR analyses drive the paper's five lowering optimizations:
   (i)   per-variable caller-saves stacks     -> save sets from liveness,
   (ii)  block-local temporaries              -> syntactic def-before-use,
   (iii) stack only when live across a call   -> save sets / recursion info,
   (iv)  top-of-stack caching                 -> structural in the VM,
   (v)   pop-push elimination                 -> peephole in lowering.py.
+
+Lowered-IR analyses drive the pass pipeline (passes.py) and the verifier
+(verifier.py): :class:`LoweredLiveness` (dead-code elimination),
+:func:`stack_effects` (per-function stack-balance dataflow) and
+:func:`stack_depth_bound` (interprocedural worst-case stack depth, the
+static replacement for the magic ``max_depth=32``).
 """
 from __future__ import annotations
 
-from typing import Iterable
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 
@@ -91,18 +98,25 @@ class Liveness:
                     self.live_out[i] = new_out
                     self.live_in[i] = new_in
                     changed = True
+        # Per-op live-after sets, cached at solve time.  One backward scan
+        # per block here makes every live_after() query O(1) instead of
+        # rescanning the block suffix — this is a hot path now that the
+        # pass pipeline re-runs analyses after every transform.
+        self._after: list[list[frozenset[str]]] = []
+        for i, blk in enumerate(func.blocks):
+            live = set(self.live_out[i])
+            live.update(term_reads(blk.term))
+            after: list[frozenset[str]] = [frozenset()] * len(blk.ops)
+            for j in range(len(blk.ops) - 1, -1, -1):
+                after[j] = frozenset(live)
+                op = blk.ops[j]
+                live -= set(op_writes(op))
+                live |= set(op_reads(op))
+            self._after.append(after)
 
     def live_after(self, block_idx: int, op_idx: int) -> set[str]:
         """Variables live immediately after op ``op_idx`` in ``block_idx``."""
-        blk = self.func.blocks[block_idx]
-        live = set(self.live_out[block_idx])
-        for r in term_reads(blk.term):
-            live.add(r)
-        for j in range(len(blk.ops) - 1, op_idx, -1):
-            op = blk.ops[j]
-            live -= set(op_writes(op))
-            live |= set(op_reads(op))
-        return live
+        return set(self._after[block_idx][op_idx])
 
 
 # --------------------------------------------------------------------------
@@ -139,6 +153,262 @@ def pinned_blocks(lowered: "ir.LoweredProgram") -> frozenset[int]:
             pinned.add(blk.term.target)
             pinned.add(blk.term.ret)
     return frozenset(pinned)
+
+
+# --------------------------------------------------------------------------
+# Lowered-CFG liveness (drives dead-code elimination in passes.py)
+# --------------------------------------------------------------------------
+
+
+class LoweredLiveness:
+    """Backward liveness of variable *tops* over the lowered CFG.
+
+    Deliberately conservative about dynamic control flow: an ``LReturn``
+    may resume at *any* return site (every ``LPushJump.ret``) or at
+    program exit (where ``main_outputs`` stay live), so its live-out is
+    the union over all of them.  ``LPush`` reads both its source and the
+    variable it buries — the buried value is restored by a later ``LPop``
+    and may be read afterwards — so a value that reaches a push is never
+    considered dead.
+    """
+
+    def __init__(self, lowered: ir.LoweredProgram):
+        self.lowered = lowered
+        n = len(lowered.blocks)
+        self.live_in: list[set[str]] = [set() for _ in range(n)]
+        self.live_out: list[set[str]] = [set() for _ in range(n)]
+        self._ret_sites = tuple(sorted({
+            blk.term.ret
+            for blk in lowered.blocks
+            if isinstance(blk.term, ir.LPushJump)
+        }))
+        self._solve()
+
+    @staticmethod
+    def op_reads(op: ir.LOp) -> tuple[str, ...]:
+        if isinstance(op, ir.LPush):
+            return (op.src, op.var)
+        return ir.prim_reads(op)
+
+    def successors(self, i: int) -> tuple[int, ...]:
+        t = self.lowered.blocks[i].term
+        if isinstance(t, ir.LJump):
+            return (t.target,)
+        if isinstance(t, ir.LBranch):
+            return (t.true, t.false)
+        if isinstance(t, ir.LPushJump):
+            return (t.target,)
+        return self._ret_sites  # LReturn: any ret site (exit is separate)
+
+    def _block_use_def(self, blk: ir.LBlock) -> tuple[set[str], set[str]]:
+        use: set[str] = set()
+        defined: set[str] = set()
+        for op in blk.ops:
+            for r in self.op_reads(op):
+                if r not in defined:
+                    use.add(r)
+            defined.update(ir.prim_writes(op))
+        if isinstance(blk.term, ir.LBranch) and blk.term.var not in defined:
+            use.add(blk.term.var)
+        return use, defined
+
+    def _solve(self) -> None:
+        blocks = self.lowered.blocks
+        exit_live = set(self.lowered.main_outputs)
+        use_def = [self._block_use_def(b) for b in blocks]
+        changed = True
+        while changed:
+            changed = False
+            for i in range(len(blocks) - 1, -1, -1):
+                new_out: set[str] = set()
+                if isinstance(blocks[i].term, ir.LReturn):
+                    new_out |= exit_live
+                for s in self.successors(i):
+                    new_out |= self.live_in[s]
+                use, defined = use_def[i]
+                new_in = use | (new_out - defined)
+                if new_out != self.live_out[i] or new_in != self.live_in[i]:
+                    self.live_out[i] = new_out
+                    self.live_in[i] = new_in
+                    changed = True
+
+
+# --------------------------------------------------------------------------
+# Interprocedural stack effects + static stack-depth bound
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FunctionStackEffects:
+    """Stack-balance summary of one function's lowered body.
+
+    ``entry_deltas[b]`` is the per-variable stack delta (pushes minus
+    pops, relative to the function's own entry) on entry to block ``b``;
+    zero entries are dropped.  ``local_peaks[v]`` is the largest standing
+    delta ``v`` reaches anywhere in the body.  ``calls`` records each
+    ``LPushJump`` site as ``(block, callee, standing deltas)`` — the
+    deltas held *while the callee runs*.
+    """
+
+    name: str
+    entry_deltas: dict[int, dict[str, int]]
+    local_peaks: dict[str, int]
+    calls: tuple[tuple[int, str, dict[str, int]], ...]
+
+
+def stack_effects(
+    lowered: ir.LoweredProgram,
+) -> dict[str, FunctionStackEffects]:
+    """Per-function stack-balance dataflow over the lowered CFG.
+
+    This is the JVM-bytecode-style verification of the paper's calling
+    convention: within one frame, every variable's stack delta must be
+    non-negative everywhere, merge points must agree, and every
+    ``LReturn`` must be reached with all deltas at zero (the caller's
+    return site pops exactly what the call site pushed).  A call is
+    summarized as a net-zero edge from the ``LPushJump`` block to its
+    return site.
+
+    Raises ``ValueError`` naming the function, block and variable on any
+    violation; the verifier re-raises it as a ``VerificationError``.
+    """
+    entry_of = {e: f for f, e in lowered.func_entries.items()}
+    out: dict[str, FunctionStackEffects] = {}
+    for fname, entry in lowered.func_entries.items():
+        entry_deltas: dict[int, dict[str, int]] = {}
+        local_peaks: dict[str, int] = {}
+        calls: list[tuple[int, str, dict[str, int]]] = []
+        work: list[tuple[int, dict[str, int]]] = [(entry, {})]
+        while work:
+            b, delta = work.pop()
+            if b in entry_deltas:
+                if entry_deltas[b] != delta:
+                    raise ValueError(
+                        f"{fname}: block {b} "
+                        f"({lowered.blocks[b].label or 'unlabeled'}) is "
+                        f"reached with disagreeing stack deltas "
+                        f"{entry_deltas[b]} vs {delta}"
+                    )
+                continue
+            entry_deltas[b] = delta
+            cur = dict(delta)
+            blk = lowered.blocks[b]
+            for op in blk.ops:
+                if isinstance(op, ir.LPush):
+                    cur[op.var] = cur.get(op.var, 0) + 1
+                    local_peaks[op.var] = max(
+                        local_peaks.get(op.var, 0), cur[op.var]
+                    )
+                elif isinstance(op, ir.LPop):
+                    cur[op.var] = cur.get(op.var, 0) - 1
+                    if cur[op.var] < 0:
+                        raise ValueError(
+                            f"{fname}: block {b} ({blk.label}): pop of "
+                            f"{op.var!r} below the frame's stack floor "
+                            "(unbalanced push/pop)"
+                        )
+            cur = {v: d for v, d in cur.items() if d}
+            t = blk.term
+            if isinstance(t, ir.LJump):
+                work.append((t.target, cur))
+            elif isinstance(t, ir.LBranch):
+                work.append((t.true, cur))
+                work.append((t.false, cur))
+            elif isinstance(t, ir.LPushJump):
+                callee = entry_of.get(t.target)
+                if callee is None:
+                    raise ValueError(
+                        f"{fname}: block {b} ({blk.label}): pushjump "
+                        f"target {t.target} is not a function entry"
+                    )
+                calls.append((b, callee, cur))
+                work.append((t.ret, cur))
+            elif isinstance(t, ir.LReturn):
+                if cur:
+                    raise ValueError(
+                        f"{fname}: block {b} ({blk.label}): returns with "
+                        f"non-zero stack delta for {sorted(cur)} "
+                        "(unbalanced push/pop)"
+                    )
+            else:
+                raise ValueError(
+                    f"{fname}: block {b} ({blk.label}): invalid lowered "
+                    f"terminator {t!r}"
+                )
+        out[fname] = FunctionStackEffects(
+            fname, entry_deltas, local_peaks, tuple(calls)
+        )
+    return out
+
+
+@dataclass(frozen=True)
+class StackDepthReport:
+    """Worst-case stack usage of a lowered program, statically bounded.
+
+    For non-recursive call structures, ``required_max_depth`` is the
+    smallest ``VMConfig.max_depth`` that can never overflow: the pc stack
+    needs ``pc_depth + 1`` slots (the pc pointer starts at 1, above the
+    exit sentinel) and each variable stack needs ``var_depths[v]`` slots.
+    A recursive program has no static bound: ``required_max_depth`` and
+    ``pc_depth`` are ``None`` and ``recursive_cycle`` names the cycle of
+    functions whose call depth is input-dependent.
+    """
+
+    pc_depth: Optional[int]
+    var_depths: dict[str, int]
+    required_max_depth: Optional[int]
+    recursive_cycle: Optional[tuple[str, ...]]
+
+
+def stack_depth_bound(lowered: ir.LoweredProgram) -> StackDepthReport:
+    """Interprocedural worst-case pc/variable stack depth from ``main``.
+
+    Walks the lowered call graph (``LPushJump`` sites from
+    :func:`stack_effects`) accumulating, per variable, the standing
+    pushes held across each call plus the callee subtree's own peak.
+    Only functions reachable from the program entry contribute — a
+    registered-but-never-called recursive helper cannot overflow at run
+    time and does not forfeit the static bound.
+    """
+    effects = stack_effects(lowered)
+    entry_of = {e: f for f, e in lowered.func_entries.items()}
+    main = entry_of[lowered.entry]
+    memo: dict[str, tuple[int, dict[str, int]]] = {}
+    path: list[str] = []
+    cycle: Optional[tuple[str, ...]] = None
+
+    def visit(f: str) -> tuple[int, dict[str, int]]:
+        nonlocal cycle
+        if f in memo:
+            return memo[f]
+        if f in path:
+            if cycle is None:
+                cycle = tuple(path[path.index(f):])
+            return (0, {})
+        path.append(f)
+        eff = effects[f]
+        pc = 0
+        peaks = dict(eff.local_peaks)
+        for _b, callee, standing in eff.calls:
+            cpc, cpeaks = visit(callee)
+            pc = max(pc, 1 + cpc)
+            for v, p in cpeaks.items():
+                peaks[v] = max(peaks.get(v, 0), standing.get(v, 0) + p)
+        path.pop()
+        memo[f] = (pc, peaks)
+        return memo[f]
+
+    pc, peaks = visit(main)
+    if cycle is not None:
+        return StackDepthReport(
+            pc_depth=None, var_depths={}, required_max_depth=None,
+            recursive_cycle=cycle,
+        )
+    required = max([pc + 1, 1] + list(peaks.values()))
+    return StackDepthReport(
+        pc_depth=pc, var_depths=peaks, required_max_depth=required,
+        recursive_cycle=None,
+    )
 
 
 # --------------------------------------------------------------------------

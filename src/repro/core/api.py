@@ -54,6 +54,7 @@ class BatchedProgram:
         schedule: str = "earliest",
         fuse: bool = False,  # legacy shim keeps the seed's unfused default
         mesh=None,  # lane sharding: None | device count | 1-D Mesh
+        verify: bool = False,  # run the lowered-IR verifier between passes
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -63,9 +64,9 @@ class BatchedProgram:
         self.main = program.functions[program.main]
         self.last_result: Optional[pc_vm.VMResult] = None
         if backend == "pc":
-            self.lowered = lowering.lower(program)
+            self.lowered = lowering.lower(program, verify=verify)
             if fuse:
-                self.lowered = fusion.fuse(self.lowered)
+                self.lowered = fusion.fuse(self.lowered, verify=verify)
             self.vm = pc_vm.ProgramCounterVM(
                 self.lowered,
                 pc_vm.VMConfig(

@@ -37,7 +37,8 @@ Execution cache
 Tracing (frontend -> IR) happens once per decorated function; the pc
 backend's stack-explicit lowering happens once per *program*; per-batch-size
 executors and per-aval compiled artifacts are memoized under a
-``(backend, batch_size, schedule, fuse, mesh, input avals)`` key.  ``cache_info()`` exposes the
+``(backend, batch_size, schedule, fuse, verify, dce, mesh, input avals)``
+key.  ``cache_info()`` exposes the
 counters so callers (and tests) can prove that a repeat call at the same
 avals performs no re-trace, no re-lower, and no re-compile, and that a call
 at a *new* batch size reuses the lowering.
@@ -59,12 +60,13 @@ import jax
 import jax.numpy as jnp
 
 from . import (
+    analysis,
     ast_frontend,
     frontend,
-    fusion,
     ir,
     local_static,
     lowering,
+    passes,
     pc_vm,
     reference,
 )
@@ -80,6 +82,11 @@ __all__ = [
 ]
 
 BACKENDS = ("pc", "local", "local_eager", "reference")
+
+#: Fallback stack depth when ``max_depth=None`` and the program is
+#: recursive: an input-dependent call depth has no static bound, so the
+#: historical default applies (the overflow message then names the cycle).
+DEFAULT_MAX_DEPTH = 32
 
 #: The default unified frontend namespace.  ``@autobatch`` registrations land
 #: here unless an explicit ``registry=`` is passed, so decorated functions in
@@ -142,23 +149,31 @@ def _flatten_spec(entry: Any) -> tuple[list[jax.ShapeDtypeStruct], Any, bool]:
 # --------------------------------------------------------------------------
 
 
-def _raise_if_overflowed(flags, batch_size: int, max_depth: int) -> None:
+def _raise_if_overflowed(
+    flags, batch_size: int, max_depth: int, hint: str = ""
+) -> None:
     """Shared overflow gate: silently-corrupted members (dropped
-    out-of-range pushes) must never escape the pytree API."""
+    out-of-range pushes) must never escape the pytree API.
+
+    ``hint`` carries the static stack-depth analysis' guidance (the
+    inferred bound, or the recursive cycle that defeats it).
+    """
     if flags.any():
         raise pc_vm.StackOverflow(
             f"pc/variable stack overflow: {int(flags.sum())} of "
             f"{batch_size} batch members exceeded max_depth={max_depth}; "
             "their results would be invalid (out-of-range pushes are "
-            "dropped). Pass a larger max_depth= to autobatch()."
+            "dropped). "
+            + (hint or "Pass a larger max_depth= to autobatch().")
         )
 
 
 class _PcExecutor:
     def __init__(self, lowered: ir.LoweredProgram, main: str,
-                 config: pc_vm.VMConfig):
+                 config: pc_vm.VMConfig, overflow_hint: str = ""):
         self.main = main
         self.batch_size = config.batch_size
+        self.overflow_hint = overflow_hint
         self.vm = pc_vm.ProgramCounterVM(lowered, config)
         self.last_result: Optional[pc_vm.VMResult] = None
 
@@ -173,6 +188,7 @@ class _PcExecutor:
             _raise_if_overflowed(
                 jax.device_get(res.depth_exceeded),
                 self.batch_size, self.vm.config.max_depth,
+                self.overflow_hint,
             )
         return {k.split("/", 1)[1]: v for k, v in res.outputs.items()}
 
@@ -386,6 +402,7 @@ class Stepper:
         _raise_if_overflowed(
             jax.device_get(state["depth_exceeded"]),
             self.batch_size, self.vm.config.max_depth,
+            self._ex.overflow_hint,
         )
         return self.outputs(state)
 
@@ -426,13 +443,15 @@ class AutobatchedFunction:
         out_leaves: tuple[str, ...],
         backend: str,
         batch_size: Optional[int],
-        max_depth: int,
+        max_depth: Optional[int],
         max_steps: int,
         use_kernel: bool,
         collect_stats: bool,
         schedule: str,
         fuse: bool,
         mesh: Any = None,
+        verify: bool = False,
+        dce: bool = False,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -447,6 +466,9 @@ class AutobatchedFunction:
         self.schedule = schedule
         self.fuse = fuse
         self.mesh = mesh
+        self.verify = verify
+        self.dce = dce
+        self.max_depth = max_depth  # None: use the static bound (pc)
         # Resolved lazily (resolving may initialize the jax backend, which
         # a decorator at module import time must not do).
         self._mesh_key_cache: Optional[tuple] = None
@@ -456,11 +478,12 @@ class AutobatchedFunction:
         )
         self._arg_specs = arg_specs
         self._vm_opts = dict(
-            max_depth=max_depth, max_steps=max_steps, use_kernel=use_kernel,
+            max_steps=max_steps, use_kernel=use_kernel,
             collect_block_stats=collect_stats, schedule=schedule, mesh=mesh,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
+        self._depth_report: Optional[analysis.StackDepthReport] = None
         self._executors: dict[int, Any] = {}
         self._aval_cache: dict[tuple, Any] = {}
         self._hits = 0
@@ -516,17 +539,76 @@ class AutobatchedFunction:
     def lowered(self) -> ir.LoweredProgram:
         """The merged stack-explicit program (pc backend; lowered once).
 
-        When ``fuse=True`` (the default) the superblock fusion pass runs
+        When ``fuse=True`` (the default) the superblock fusion passes run
         as part of this single lowering, so all batch sizes share the
-        fused program.
+        fused program; ``dce=True`` appends the dead-code-elimination
+        pass, and ``verify=True`` runs the lowered-IR verifier between
+        every pass of the pipeline.
         """
         if self._lowered is None:
-            low = lowering.lower(self.program)
+            low = lowering.lower(self.program, verify=self.verify)
+            post: list = []
             if self.fuse:
-                low = fusion.fuse(low)
+                post.extend(passes.fusion_passes())
+            if self.dce:
+                post.append(passes.DeadCodeElimination())
+            if post:
+                low = passes.PassPipeline(
+                    post, verify=self.verify, debug=self.verify
+                ).run(low)
             self._lowered = low
             self._lower_count += 1
         return self._lowered
+
+    @property
+    def depth_report(self) -> analysis.StackDepthReport:
+        """Static worst-case stack usage of the lowered program (pc)."""
+        if self._depth_report is None:
+            self._depth_report = analysis.stack_depth_bound(self.lowered)
+        return self._depth_report
+
+    @property
+    def resolved_max_depth(self) -> int:
+        """The ``max_depth`` the VM actually runs with.
+
+        An explicit ``max_depth=`` wins.  With ``max_depth=None``, the
+        statically inferred bound (``depth_report.required_max_depth``)
+        applies; a recursive program has no static bound and falls back
+        to :data:`DEFAULT_MAX_DEPTH`.
+        """
+        if self.max_depth is not None:
+            return self.max_depth
+        rep = self.depth_report
+        if rep.required_max_depth is None:
+            return DEFAULT_MAX_DEPTH
+        return rep.required_max_depth
+
+    def _overflow_hint(self) -> str:
+        """Actionable guidance for StackOverflow, from the static bound."""
+        rep = self.depth_report
+        if rep.recursive_cycle is not None:
+            cyc = " -> ".join(rep.recursive_cycle + rep.recursive_cycle[:1])
+            return (
+                f"The program is recursive ({cyc}), so the required depth "
+                "depends on the inputs; pass a larger max_depth= to "
+                "autobatch()."
+            )
+        return (
+            "The statically inferred bound for this program is "
+            f"max_depth={rep.required_max_depth}; pass max_depth= at least "
+            "that (or max_depth=None to use the bound) to autobatch()."
+        )
+
+    def diagnostics(self) -> passes.Diagnostics:
+        """Verifier + static-analysis report over the lowered program.
+
+        pc backend only (the other backends never lower).  See
+        :func:`repro.core.passes.diagnose`; ``tools/irlint.py`` prints the
+        same report from the command line.
+        """
+        if self.backend != "pc":
+            raise ValueError("diagnostics() requires the 'pc' backend")
+        return passes.diagnose(self.lowered)
 
     def _executor(self, z: int):
         ex = self._executors.get(z)
@@ -535,7 +617,11 @@ class AutobatchedFunction:
         if self.backend == "pc":
             ex = _PcExecutor(
                 self.lowered, self.program.main,
-                pc_vm.VMConfig(batch_size=z, **self._vm_opts),
+                pc_vm.VMConfig(
+                    batch_size=z, max_depth=self.resolved_max_depth,
+                    **self._vm_opts,
+                ),
+                overflow_hint=self._overflow_hint(),
             )
         elif self.backend in ("local", "local_eager"):
             ex = _LocalExecutor(
@@ -654,6 +740,8 @@ class AutobatchedFunction:
             z,
             self.schedule,
             self.fuse,
+            self.verify,
+            self.dce,
             self._mesh_key(),
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
@@ -859,13 +947,15 @@ def autobatch(
     out_spec: Any = None,
     backend: str = "pc",
     batch_size: Optional[int] = None,
-    max_depth: int = 32,
+    max_depth: Optional[int] = None,
     max_steps: int = 1_000_000,
     use_kernel: bool = False,
     collect_stats: bool = True,
     schedule: str = "earliest",
     fuse: bool = True,
     mesh: Any = None,
+    verify: bool = False,
+    dce: bool = True,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -908,7 +998,17 @@ def autobatch(
     * ``mesh`` shards the batch-lane axis of every VM state array across
       devices (``None`` = single device, an int device count, or a 1-D
       ``jax.sharding.Mesh``), compiling the whole program as one SPMD
-      ``lax.while_loop``; the batch size must divide across the mesh.
+      ``lax.while_loop``; the batch size must divide across the mesh;
+    * ``dce=True`` runs the dead-code-elimination pass over the lowered
+      program, dropping primitives whose outputs are never observed and
+      shrinking the VM state the masked updates touch every dispatch;
+    * ``verify=True`` runs the lowered-IR verifier (verifier.py) between
+      every pass of the lowering/fusion pipeline;
+    * ``max_depth=None`` (the default) sizes the pc/variable stacks from
+      the static interprocedural bound (``fn.depth_report``); recursive
+      programs have no static bound and fall back to
+      ``DEFAULT_MAX_DEPTH=32`` — pass an explicit ``max_depth=`` there
+      (a stack overflow names the recursive cycle).
     """
     if target is None:
         return functools.partial(
@@ -924,6 +1024,8 @@ def autobatch(
             schedule=schedule,
             fuse=fuse,
             mesh=mesh,
+            verify=verify,
+            dce=dce,
             registry=registry,
         )
     if registry is not None:
@@ -943,7 +1045,7 @@ def autobatch(
     opts = dict(
         backend=backend, batch_size=batch_size, max_depth=max_depth,
         max_steps=max_steps, use_kernel=use_kernel, collect_stats=collect_stats,
-        schedule=schedule, fuse=fuse, mesh=mesh,
+        schedule=schedule, fuse=fuse, mesh=mesh, verify=verify, dce=dce,
     )
 
     program: Optional[ir.Program] = None

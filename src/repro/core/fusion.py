@@ -37,7 +37,11 @@ superblocks — a pop/push pair or a def-before-use chain that used to span
 a block boundary becomes block-local, so the pair cancels and the variable
 drops out of VM state entirely.
 
-Entry point: :func:`fuse`.  Provenance is recorded on
+Entry point: :func:`fuse`, which since the pass-pipeline refactor is just
+``passes.PassPipeline(passes.fusion_passes())`` — :func:`fuse_chains` here
+is the chain-concatenation step (the ``JumpChainFusion`` pass), and the
+block-local re-optimizations are the shared ``PopPushElimination`` /
+``TempDetection`` passes.  Provenance is recorded on
 ``LoweredProgram.fused_from`` (new block index -> original indices), which
 the VM surfaces in its per-run scheduler stats.
 """
@@ -46,12 +50,32 @@ from __future__ import annotations
 from . import analysis, ir, lowering
 
 
-def fuse(low: ir.LoweredProgram) -> ir.LoweredProgram:
+def fuse(
+    low: ir.LoweredProgram, *, verify: bool = False
+) -> ir.LoweredProgram:
     """Return a semantically identical program with fused superblocks.
 
     The input is not mutated.  ``fused_from`` on the result maps each new
     block index to the tuple of input block indices whose ops it
-    concatenates (composed through an already-fused input).
+    concatenates (composed through an already-fused input).  With
+    ``verify=True`` the lowered-IR verifier runs between every pass of the
+    fusion pipeline (see passes.py).
+    """
+    from . import passes  # deferred: passes imports this module
+
+    pipeline = passes.PassPipeline(
+        passes.fusion_passes(), verify=verify, debug=verify
+    )
+    return pipeline.run(low)
+
+
+def fuse_chains(low: ir.LoweredProgram) -> ir.LoweredProgram:
+    """Jump-chain fusion proper (the ``JumpChainFusion`` pass body):
+    concatenate unconditional jump chains, drop unreachable blocks, compact
+    indices and record provenance.  Variable classes are recomputed so the
+    result is self-consistent, but the block-local optimizations (popush
+    elimination, temp detection on the merged superblocks) are separate
+    passes.
     """
     blocks = low.blocks
     n = len(blocks)
@@ -119,12 +143,10 @@ def fuse(low: ir.LoweredProgram) -> ir.LoweredProgram:
                 target=index[t.target], ret=index[t.ret]
             )
 
-    # ---- 4. Re-run the block-local optimizations on the superblocks. ----
-    # Pop/push pairs and def-before-use chains that used to span a block
-    # boundary are now block-local: (v) cancels the pairs, recomputing
-    # stack_vars may free a variable of its stack entirely, and (ii) drops
-    # newly block-confined variables out of VM state.
-    lowering.popush_eliminate(new_blocks)
+    # Recompute the variable classes for the merged blocks (dropping an
+    # unreachable block can shrink the pushed/popped set).  The block-local
+    # re-optimizations — (v) popush pairs newly confined to one superblock,
+    # (ii) temp detection on the merged bodies — run as their own passes.
     stack_vars = frozenset(
         op.var
         for blk in new_blocks

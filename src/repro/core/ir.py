@@ -280,6 +280,15 @@ class LoweredProgram:
         """Sentinel pc value meaning "this member has halted"."""
         return len(self.blocks)
 
+    def var_class(self, var: str) -> str:
+        """``"stack"`` (has a stack + pointer), ``"temp"`` (block-local,
+        never enters VM state) or ``"state"`` (masked top buffer only)."""
+        if var in self.stack_vars:
+            return "stack"
+        if var in self.temp_vars:
+            return "temp"
+        return "state"
+
     def pretty(self) -> str:
         lines = []
         rev_entries = {v: k for k, v in self.func_entries.items()}
@@ -287,6 +296,9 @@ class LoweredProgram:
             hdr = f"[{i}] {blk.label}"
             if i in rev_entries:
                 hdr += f"   <entry of {rev_entries[i]}>"
+            if self.fused_from is not None and i in self.fused_from:
+                srcs = ",".join(str(s) for s in self.fused_from[i])
+                hdr += f"   <fused from {srcs}>"
             lines.append(hdr)
             for op in blk.ops:
                 if isinstance(op, LPrim):
@@ -306,6 +318,13 @@ class LoweredProgram:
                 lines.append(f"    pushjump {t.target} (ret {t.ret})")
             elif isinstance(t, LReturn):
                 lines.append("    return")
+        lines.append("vars:")
+        for v in sorted(self.var_specs):
+            spec = self.var_specs[v]
+            lines.append(
+                f"    {v}: {self.var_class(v)} "
+                f"{tuple(spec.shape)} {spec.dtype}"
+            )
         return "\n".join(lines)
 
 

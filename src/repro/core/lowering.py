@@ -38,7 +38,16 @@ from . import analysis, ir
 _Sym = Any
 
 
-def lower(program: ir.Program) -> ir.LoweredProgram:
+def lower(
+    program: ir.Program, *, verify: bool = False
+) -> ir.LoweredProgram:
+    """Lower ``program`` to the stack-explicit merged form.
+
+    Emission is followed by the block-local optimization passes
+    (``passes.lowering_passes()``: pop-push elimination, temp detection).
+    With ``verify=True`` the lowered-IR verifier runs on the raw emission
+    and between every pass.
+    """
     program.validate()
     analysis.infer_types(program)
     cg = analysis.CallGraph(program)
@@ -146,7 +155,6 @@ def lower(program: ir.Program) -> ir.LoweredProgram:
                 )
 
     _patch_targets(lowered, blockmap, func_entries)
-    popush_eliminate(lowered)
 
     stack_vars = frozenset(
         op.var
@@ -159,7 +167,7 @@ def lower(program: ir.Program) -> ir.LoweredProgram:
     main_outputs = tuple(ir.qualify(program.main, o) for o in main.outputs)
     temp_vars = find_temporaries(lowered, stack_vars, main_params, main_outputs)
 
-    return ir.LoweredProgram(
+    raw = ir.LoweredProgram(
         blocks=lowered,
         entry=func_entries[program.main],
         main_params=main_params,
@@ -169,6 +177,14 @@ def lower(program: ir.Program) -> ir.LoweredProgram:
         temp_vars=temp_vars,
         func_entries=func_entries,
     )
+    # The block-local optimizations ((v) pop-push elimination, (ii) temp
+    # detection) run as pipeline passes over the raw emission.
+    from . import passes  # deferred: passes imports this module
+
+    pipeline = passes.PassPipeline(
+        passes.lowering_passes(), verify=verify, debug=verify
+    )
+    return pipeline.run(raw)
 
 
 def _resolve(sym: _Sym, blockmap, func_entries) -> int:

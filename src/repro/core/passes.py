@@ -1,0 +1,347 @@
+"""Composable pass pipeline over the lowered IR (ROADMAP item 5).
+
+The seed hardcoded one transform sequence inside ``lowering.lower`` and
+``fusion.fuse``.  This module re-expresses every lowered-IR transform as a
+:class:`Pass` — a named, pure ``LoweredProgram -> LoweredProgram`` rewrite —
+and runs them through :class:`PassPipeline`, which can execute the verifier
+(verifier.py) between every pass so a broken transform is caught *at the
+pass that produced it* rather than as a silent wrong answer at runtime.
+
+Passes:
+
+* :class:`JumpChainFusion`    — superblock fusion (fusion.py steps 1–3).
+* :class:`PopPushElimination` — paper opt. (v), as a pure pass.
+* :class:`TempDetection`      — paper opt. (ii), recomputed after rewrites.
+* :class:`DeadCodeElimination` — removes untagged primitives whose outputs
+  are dead under :class:`analysis.LoweredLiveness` and drops variables that
+  no longer appear anywhere from ``var_specs``, shrinking the masked-update
+  footprint the VM pays on every dispatch (VM state is exactly
+  ``var_specs - temp_vars``).
+
+:func:`diagnose` bundles the verifier + analyses into a
+:class:`Diagnostics` report — the backing for ``fn.diagnostics()`` and the
+``tools/irlint.py`` CLI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+from . import analysis, fusion, ir, lowering, verifier
+
+
+@runtime_checkable
+class Pass(Protocol):
+    """A named, pure rewrite of a lowered program."""
+
+    name: str
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        ...  # pragma: no cover - protocol
+
+
+class PassError(RuntimeError):
+    """A pass crashed or produced a program the verifier rejects."""
+
+
+@dataclass
+class PassPipeline:
+    """Run a sequence of passes, optionally verifying between every pass.
+
+    With ``verify=True`` the input program and the output of every pass is
+    checked by :func:`verifier.verify`; a failure raises :class:`PassError`
+    naming the offending pass.  ``debug=True`` additionally appends the
+    rejected program's ``pretty()`` dump to the error so the broken block
+    can be read directly.
+    """
+
+    passes: Sequence[Pass]
+    verify: bool = False
+    debug: bool = False
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        self._verify(lowered, where="input program (before any pass ran)")
+        for p in self.passes:
+            try:
+                lowered = p.run(lowered)
+            except Exception as e:
+                raise PassError(f"pass {p.name!r} failed: {e}") from e
+            self._verify(lowered, where=f"pass {p.name!r}")
+        return lowered
+
+    def _verify(self, lowered: ir.LoweredProgram, where: str) -> None:
+        if not self.verify:
+            return
+        try:
+            verifier.verify(lowered)
+        except verifier.VerificationError as e:
+            msg = f"{where} produced an invalid program: {e}"
+            if self.debug:
+                msg += "\n--- offending program ---\n" + lowered.pretty()
+            raise PassError(msg) from e
+
+
+# --------------------------------------------------------------------------
+# The existing transforms, as passes
+# --------------------------------------------------------------------------
+
+
+def _recompute_var_classes(
+    blocks: list[ir.LBlock], low: ir.LoweredProgram
+) -> tuple[frozenset[str], frozenset[str]]:
+    stack_vars = frozenset(
+        op.var
+        for blk in blocks
+        for op in blk.ops
+        if isinstance(op, (ir.LPush, ir.LPop))
+    )
+    temp_vars = lowering.find_temporaries(
+        blocks, stack_vars, low.main_params, low.main_outputs
+    )
+    return stack_vars, temp_vars
+
+
+def _copy_blocks(blocks: Sequence[ir.LBlock]) -> list[ir.LBlock]:
+    return [
+        ir.LBlock(ops=list(b.ops), term=b.term, label=b.label) for b in blocks
+    ]
+
+
+@dataclass
+class JumpChainFusion:
+    """Superblock fusion: concatenate unconditional jump chains, drop
+    unreachable blocks, record ``fused_from`` provenance (fusion.py)."""
+
+    name: str = "jump-chain-fusion"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        return fusion.fuse_chains(lowered)
+
+
+@dataclass
+class PopPushElimination:
+    """Paper opt. (v): cancel block-local ``pop v … push v <- src`` pairs
+    into masked in-place updates, then recompute the variable classes."""
+
+    name: str = "popush-elimination"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        blocks = _copy_blocks(lowered.blocks)
+        lowering.popush_eliminate(blocks)
+        stack_vars, temp_vars = _recompute_var_classes(blocks, lowered)
+        return ir.dataclass_replace(
+            lowered, blocks=blocks, stack_vars=stack_vars, temp_vars=temp_vars
+        )
+
+
+@dataclass
+class TempDetection:
+    """Paper opt. (ii): recompute which variables are block-local
+    temporaries (and so never enter VM state) after earlier rewrites."""
+
+    name: str = "temp-detection"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        stack_vars, temp_vars = _recompute_var_classes(
+            lowered.blocks, lowered
+        )
+        return ir.dataclass_replace(
+            lowered, stack_vars=stack_vars, temp_vars=temp_vars
+        )
+
+
+@dataclass
+class DeadCodeElimination:
+    """Remove primitives whose outputs are dead and shrink VM state.
+
+    Uses :class:`analysis.LoweredLiveness` (conservative about the dynamic
+    ``LReturn`` edges and about values buried by ``LPush``) to delete
+    untagged ``LPrim`` ops none of whose outputs are live, to a fixed
+    point.  Stack ops are never removed (they move stack pointers), and
+    tagged primitives are kept for the ``tag_stats`` instrumentation
+    contract even when dead.  Afterwards, variables that no longer appear
+    anywhere are dropped from ``var_specs`` — VM state is
+    ``var_specs - temp_vars``, so each dropped variable removes one masked
+    top buffer from every dispatch step.
+    """
+
+    name: str = "dead-code-elimination"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        blocks = _copy_blocks(lowered.blocks)
+        cur = ir.dataclass_replace(lowered, blocks=blocks)
+        changed = True
+        while changed:
+            changed = False
+            lv = analysis.LoweredLiveness(cur)
+            for i, blk in enumerate(blocks):
+                live = set(lv.live_out[i])
+                if isinstance(blk.term, ir.LBranch):
+                    live.add(blk.term.var)
+                kept: list[ir.LOp] = []
+                for op in reversed(blk.ops):
+                    if (
+                        isinstance(op, ir.LPrim)
+                        and op.tag is None
+                        and not (set(op.outs) & live)
+                    ):
+                        changed = True
+                        continue
+                    kept.append(op)
+                    live -= set(ir.prim_writes(op))
+                    live |= set(analysis.LoweredLiveness.op_reads(op))
+                kept.reverse()
+                blk.ops = kept
+        mentioned = self._mentioned_vars(cur)
+        keep = (
+            mentioned
+            | set(cur.main_params)
+            | set(cur.main_outputs)
+        )
+        var_specs = {v: s for v, s in cur.var_specs.items() if v in keep}
+        stack_vars, temp_vars = _recompute_var_classes(blocks, cur)
+        return ir.dataclass_replace(
+            cur,
+            var_specs=var_specs,
+            stack_vars=stack_vars,
+            temp_vars=temp_vars,
+        )
+
+    @staticmethod
+    def _mentioned_vars(lowered: ir.LoweredProgram) -> set[str]:
+        vs: set[str] = set()
+        for blk in lowered.blocks:
+            for op in blk.ops:
+                vs.update(ir.prim_reads(op))
+                vs.update(ir.prim_writes(op))
+            if isinstance(blk.term, ir.LBranch):
+                vs.add(blk.term.var)
+        return vs
+
+
+def lowering_passes() -> tuple[Pass, ...]:
+    """The post-emission cleanup `lowering.lower` runs: exactly the seed's
+    popush-eliminate + find-temporaries sequence, as pipeline passes."""
+    return (PopPushElimination(), TempDetection())
+
+
+def fusion_passes() -> tuple[Pass, ...]:
+    """`fusion.fuse` as a pipeline: chain fusion, then the block-local
+    optimizations re-run on the merged superblocks (bit-exact with the
+    monolithic PR-2 implementation)."""
+    return (JumpChainFusion(), PopPushElimination(), TempDetection())
+
+
+# --------------------------------------------------------------------------
+# Diagnostics (fn.diagnostics() / tools/irlint.py)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Diagnostics:
+    """Verifier + analysis summary of one lowered program."""
+
+    num_blocks: int
+    num_ops: int
+    fused: bool
+    num_source_blocks: Optional[int]  # pre-fusion block count, if fused
+    num_state_vars: int  # masked top buffers the VM updates per dispatch
+    num_stack_vars: int
+    num_temp_vars: int
+    dead_state_vars: tuple[str, ...]  # state DCE would remove
+    dead_ops: int  # ops DCE would remove
+    pc_depth: Optional[int]
+    var_depths: dict[str, int] = field(default_factory=dict)
+    required_max_depth: Optional[int] = None
+    recursive_cycle: Optional[tuple[str, ...]] = None
+    verified: bool = False
+    verification_error: Optional[str] = None
+
+    def pretty(self) -> str:
+        lines = [
+            f"blocks:        {self.num_blocks}"
+            + (
+                f" (fused from {self.num_source_blocks})"
+                if self.fused
+                else " (unfused)"
+            ),
+            f"ops:           {self.num_ops}",
+            f"state vars:    {self.num_state_vars} "
+            f"(stack: {self.num_stack_vars}, temps excluded: "
+            f"{self.num_temp_vars})",
+        ]
+        if self.dead_ops or self.dead_state_vars:
+            lines.append(
+                f"dead:          {self.dead_ops} ops, "
+                f"{len(self.dead_state_vars)} state vars "
+                f"{sorted(self.dead_state_vars)}"
+            )
+        else:
+            lines.append("dead:          none")
+        if self.recursive_cycle is not None:
+            lines.append(
+                "stack bound:   unbounded (recursive cycle "
+                + " -> ".join(self.recursive_cycle + self.recursive_cycle[:1])
+                + ")"
+            )
+        else:
+            lines.append(
+                f"stack bound:   max_depth={self.required_max_depth} "
+                f"(pc depth {self.pc_depth}, deepest variable stack "
+                f"{max(self.var_depths.values(), default=0)})"
+            )
+        lines.append(
+            "verifier:      ok"
+            if self.verified
+            else f"verifier:      FAILED: {self.verification_error}"
+        )
+        return "\n".join(lines)
+
+
+def diagnose(lowered: ir.LoweredProgram) -> Diagnostics:
+    """Run the verifier and every lowered-IR analysis over ``lowered``."""
+    verified, err = True, None
+    try:
+        verifier.verify(lowered)
+    except verifier.VerificationError as e:
+        verified, err = False, str(e)
+    if verified:
+        depth = analysis.stack_depth_bound(lowered)
+    else:  # analyses assume a well-formed program
+        depth = analysis.StackDepthReport(None, {}, None, None)
+    state_vars = [
+        v for v in sorted(lowered.var_specs) if v not in lowered.temp_vars
+    ]
+    dead_state: tuple[str, ...] = ()
+    dead_ops = 0
+    if verified:
+        after = DeadCodeElimination().run(lowered)
+        after_state = {
+            v for v in after.var_specs if v not in after.temp_vars
+        }
+        dead_state = tuple(sorted(set(state_vars) - after_state))
+        dead_ops = sum(len(b.ops) for b in lowered.blocks) - sum(
+            len(b.ops) for b in after.blocks
+        )
+    num_src = (
+        len({s for srcs in lowered.fused_from.values() for s in srcs})
+        if lowered.fused_from is not None
+        else None
+    )
+    return Diagnostics(
+        num_blocks=len(lowered.blocks),
+        num_ops=sum(len(b.ops) for b in lowered.blocks),
+        fused=lowered.fused_from is not None,
+        num_source_blocks=num_src,
+        num_state_vars=len(state_vars),
+        num_stack_vars=len(lowered.stack_vars),
+        num_temp_vars=len(lowered.temp_vars),
+        dead_state_vars=dead_state,
+        dead_ops=dead_ops,
+        pc_depth=depth.pc_depth,
+        var_depths=depth.var_depths,
+        required_max_depth=depth.required_max_depth,
+        recursive_cycle=depth.recursive_cycle,
+        verified=verified,
+        verification_error=err,
+    )

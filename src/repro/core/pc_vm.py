@@ -182,6 +182,10 @@ class VMConfig:
     # Lane sharding: None (single device), an int device count, or a 1-D
     # jax.sharding.Mesh.  batch_size must divide evenly across the mesh.
     mesh: Any = None
+    # Run the lowered-IR verifier (verifier.py) on the program before
+    # compiling it — catches a broken transform before it becomes a wrong
+    # batched answer.
+    verify: bool = False
 
 
 @dataclass(frozen=True)
@@ -226,6 +230,10 @@ class ProgramCounterVM:
                 f"schedule must be one of {SCHEDULES}, "
                 f"got {config.schedule!r}"
             )
+        if config.verify:
+            from . import verifier
+
+            verifier.verify(lowered)
         self.lowered = lowered
         self.config = config
         self.num_blocks = len(lowered.blocks)

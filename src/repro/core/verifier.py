@@ -1,0 +1,296 @@
+"""Executable invariants of the lowered, stack-explicit IR.
+
+The paper's transformation is only sound if the lowered program
+(``ir.LoweredProgram``) stays semantically equivalent to the source
+program while lowering, fusion and the other pipeline passes rewrite it.
+:func:`verify` checks every invariant those transforms rely on:
+
+* **CFG well-formedness** — every block has a lowered terminator, every
+  terminator target (including ``LPushJump.ret``) is in range, every
+  ``LPushJump`` targets a function entry, and every load-bearing block
+  (``analysis.pinned_blocks``: program entry, function entries, return
+  sites) is reachable from the control roots.
+* **Stack balance** — along every acyclic path of every function frame,
+  each variable's push/pop delta is non-negative, merge points agree,
+  and ``LReturn`` is reached with all deltas at zero
+  (``analysis.stack_effects``).
+* **Variable classes** — ``stack_vars`` is exactly the set of variables
+  some ``LPush``/``LPop`` touches, and ``temp_vars`` (which never enter
+  VM state) are written before every read within each block that
+  mentions them.
+* **Types** — every mentioned variable has a spec, ``LPush`` sources
+  match their destination, and every ``LPrim`` agrees with its declared
+  output specs under ``jax.eval_shape``.
+* **Provenance** — ``fused_from`` covers every block with a non-empty
+  source chain, and no two blocks claim the same chain head.
+
+``PassPipeline`` (passes.py) runs :func:`verify` between passes so a
+broken transform is caught at the pass that produced it, not at runtime.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import analysis, ir
+
+
+class VerificationError(ValueError):
+    """A ``LoweredProgram`` violates a structural or semantic invariant."""
+
+
+def verify(lowered: ir.LoweredProgram, *, check_specs: bool = True) -> None:
+    """Raise :class:`VerificationError` on the first violated invariant.
+
+    ``check_specs=False`` skips the ``jax.eval_shape`` type check of
+    every primitive (the one non-structural — and by far the most
+    expensive — invariant).
+    """
+    _check_structure(lowered)
+    _check_reachability(lowered)
+    _check_stack_balance(lowered)
+    _check_var_classes(lowered)
+    if check_specs:
+        _check_specs(lowered)
+    _check_provenance(lowered)
+
+
+def _fail(msg: str) -> None:
+    raise VerificationError(msg)
+
+
+def _label(lowered: ir.LoweredProgram, i: int) -> str:
+    return f"block {i} ({lowered.blocks[i].label or 'unlabeled'})"
+
+
+# --------------------------------------------------------------------------
+# Structure + reachability
+# --------------------------------------------------------------------------
+
+
+def _check_structure(lowered: ir.LoweredProgram) -> None:
+    n = len(lowered.blocks)
+    if n == 0:
+        _fail("program has no blocks")
+    if not (0 <= lowered.entry < n):
+        _fail(f"entry {lowered.entry} is out of range [0, {n})")
+    for fname, e in lowered.func_entries.items():
+        if not (0 <= e < n):
+            _fail(f"entry of function {fname!r} is out of range: {e}")
+    entries = set(lowered.func_entries.values())
+    if lowered.entry not in entries:
+        _fail(f"entry {lowered.entry} is not a function entry")
+    for i, blk in enumerate(lowered.blocks):
+        for op in blk.ops:
+            if not isinstance(op, (ir.LPrim, ir.LPush, ir.LPop)):
+                _fail(f"{_label(lowered, i)}: invalid lowered op {op!r}")
+        t = blk.term
+        if not isinstance(t, (ir.LJump, ir.LBranch, ir.LPushJump,
+                              ir.LReturn)):
+            _fail(f"{_label(lowered, i)}: invalid terminator {t!r}")
+        for tgt in analysis.lowered_targets(t):
+            if not (0 <= tgt < n):
+                _fail(
+                    f"{_label(lowered, i)}: terminator target {tgt} is "
+                    f"out of range [0, {n})"
+                )
+        if isinstance(t, ir.LPushJump) and t.target not in entries:
+            _fail(
+                f"{_label(lowered, i)}: pushjump target {t.target} is "
+                "not a function entry"
+            )
+
+
+def _check_reachability(lowered: ir.LoweredProgram) -> None:
+    roots = {lowered.entry} | set(lowered.func_entries.values())
+    reachable: set[int] = set()
+    stack = list(roots)
+    while stack:
+        b = stack.pop()
+        if b in reachable:
+            continue
+        reachable.add(b)
+        stack.extend(analysis.lowered_targets(lowered.blocks[b].term))
+    for b in sorted(analysis.pinned_blocks(lowered)):
+        if b not in reachable:
+            _fail(
+                f"pinned {_label(lowered, b)} is unreachable from the "
+                "control roots (entry + function entries)"
+            )
+
+
+# --------------------------------------------------------------------------
+# Stack balance
+# --------------------------------------------------------------------------
+
+
+def _check_stack_balance(lowered: ir.LoweredProgram) -> None:
+    try:
+        analysis.stack_effects(lowered)
+    except ValueError as e:
+        raise VerificationError(f"stack balance: {e}") from e
+
+
+# --------------------------------------------------------------------------
+# Variable classes (stack_vars exactness, temp def-before-use)
+# --------------------------------------------------------------------------
+
+
+def _check_var_classes(lowered: ir.LoweredProgram) -> None:
+    actual = frozenset(
+        op.var
+        for blk in lowered.blocks
+        for op in blk.ops
+        if isinstance(op, (ir.LPush, ir.LPop))
+    )
+    if actual != lowered.stack_vars:
+        missing = sorted(actual - lowered.stack_vars)
+        extra = sorted(lowered.stack_vars - actual)
+        _fail(
+            "stack_vars is not exactly the pushed/popped set: "
+            f"missing {missing}, extra {extra}"
+        )
+    overlap = lowered.temp_vars & lowered.stack_vars
+    if overlap:
+        _fail(f"temp_vars overlap stack_vars: {sorted(overlap)}")
+    io = set(lowered.main_params) | set(lowered.main_outputs)
+    bad_io = lowered.temp_vars & io
+    if bad_io:
+        _fail(f"temp_vars include main params/outputs: {sorted(bad_io)}")
+    for i, blk in enumerate(lowered.blocks):
+        written: set[str] = set()
+        for op in blk.ops:
+            for r in ir.prim_reads(op):
+                if r in lowered.temp_vars and r not in written:
+                    _fail(
+                        f"{_label(lowered, i)}: temp var {r!r} is read "
+                        "before any write in this block (def-before-use)"
+                    )
+            written.update(ir.prim_writes(op))
+        if (
+            isinstance(blk.term, ir.LBranch)
+            and blk.term.var in lowered.temp_vars
+            and blk.term.var not in written
+        ):
+            _fail(
+                f"{_label(lowered, i)}: temp var {blk.term.var!r} is "
+                "read by the terminator but never written in this block"
+            )
+
+
+# --------------------------------------------------------------------------
+# Types (var_specs consistency via jax.eval_shape)
+# --------------------------------------------------------------------------
+
+
+def _specs_eq(a, b) -> bool:
+    return tuple(a.shape) == tuple(b.shape) and a.dtype == b.dtype
+
+
+def _check_specs(lowered: ir.LoweredProgram) -> None:
+    specs = lowered.var_specs
+    for v in (*lowered.main_params, *lowered.main_outputs):
+        if v not in specs:
+            _fail(f"main variable {v!r} has no var_specs entry")
+    checked: set[int] = set()  # fusion tail-duplicates share op objects
+    for i, blk in enumerate(lowered.blocks):
+        for op in blk.ops:
+            for v in (*ir.prim_reads(op), *ir.prim_writes(op)):
+                if v not in specs:
+                    _fail(
+                        f"{_label(lowered, i)}: variable {v!r} has no "
+                        "var_specs entry"
+                    )
+            if isinstance(op, ir.LPush):
+                if not _specs_eq(specs[op.var], specs[op.src]):
+                    _fail(
+                        f"{_label(lowered, i)}: push {op.var} <- {op.src} "
+                        f"mixes specs {specs[op.var]} vs {specs[op.src]}"
+                    )
+                continue
+            if not isinstance(op, ir.LPrim) or id(op) in checked:
+                continue
+            checked.add(id(op))
+            _check_prim(lowered, i, op, specs)
+        if isinstance(blk.term, ir.LBranch) and blk.term.var not in specs:
+            _fail(
+                f"{_label(lowered, i)}: branch variable {blk.term.var!r} "
+                "has no var_specs entry"
+            )
+
+
+def _check_prim(lowered, i: int, op: ir.LPrim, specs) -> None:
+    in_specs = [specs[v] for v in op.ins]
+    if op.batched:
+        # Batched prims consume/produce a leading batch axis; type-check
+        # at batch size 1 and strip it (mirrors analysis.infer_types).
+        in_specs = [
+            jax.ShapeDtypeStruct((1,) + tuple(s.shape), s.dtype)
+            for s in in_specs
+        ]
+    try:
+        out = jax.eval_shape(op.fn, *in_specs)
+    except Exception as e:
+        raise VerificationError(
+            f"{_label(lowered, i)}: primitive {op.name!r}({op.ins}) does "
+            f"not type-check: {e}"
+        ) from e
+    outs = out if isinstance(out, tuple) else (out,)
+    if op.batched:
+        for o in outs:
+            if not o.shape or o.shape[0] != 1:
+                _fail(
+                    f"{_label(lowered, i)}: batched primitive {op.name!r} "
+                    f"output lost its batch axis: {o.shape}"
+                )
+        outs = tuple(
+            jax.ShapeDtypeStruct(o.shape[1:], o.dtype) for o in outs
+        )
+    if len(outs) != len(op.outs):
+        _fail(
+            f"{_label(lowered, i)}: primitive {op.name!r} returns "
+            f"{len(outs)} values for {len(op.outs)} outputs"
+        )
+    for name, o in zip(op.outs, outs):
+        if not _specs_eq(specs[name], o):
+            _fail(
+                f"{_label(lowered, i)}: primitive {op.name!r} writes "
+                f"{name!r} as {jax.ShapeDtypeStruct(o.shape, o.dtype)} "
+                f"but var_specs declares {specs[name]}"
+            )
+
+
+# --------------------------------------------------------------------------
+# Fusion provenance
+# --------------------------------------------------------------------------
+
+
+def _check_provenance(lowered: ir.LoweredProgram) -> None:
+    prov = lowered.fused_from
+    if prov is None:
+        return
+    n = len(lowered.blocks)
+    if set(prov) != set(range(n)):
+        missing = sorted(set(range(n)) - set(prov))
+        extra = sorted(set(prov) - set(range(n)))
+        _fail(
+            f"fused_from keys are not exactly 0..{n - 1}: "
+            f"missing blocks {missing}, extra keys {extra}"
+        )
+    heads: dict[int, int] = {}
+    for b in range(n):
+        srcs = prov[b]
+        if not srcs:
+            _fail(f"fused_from[{b}] is empty: block {b} has no provenance")
+        for s in srcs:
+            if not isinstance(s, int) or s < 0:
+                _fail(f"fused_from[{b}] has invalid source index {s!r}")
+        if len(set(srcs)) != len(srcs):
+            _fail(f"fused_from[{b}] repeats a source block: {srcs}")
+        head = srcs[0]
+        if head in heads:
+            _fail(
+                f"blocks {heads[head]} and {b} both claim original block "
+                f"{head} as their chain head (provenance is not a "
+                "partition)"
+            )
+        heads[head] = b

@@ -322,6 +322,7 @@ def make_nuts_kernel(
     schedule: str = "earliest",
     fuse: bool = True,
     mesh=None,
+    verify: bool = False,
 ) -> batching.AutobatchedFunction:
     """The public NUTS entry point, on the decorator-first pytree API.
 
@@ -359,6 +360,7 @@ def make_nuts_kernel(
         schedule=schedule,
         fuse=fuse,
         mesh=mesh,
+        verify=verify,
     )
 
 

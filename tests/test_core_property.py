@@ -170,7 +170,7 @@ def test_schedule_fuse_matrix_matches_reference(seed, inputs):
         for fuse in (False, True):
             got = api.autobatch(
                 prog, z, backend="pc", max_depth=64, max_steps=200_000,
-                schedule=schedule, fuse=fuse,
+                schedule=schedule, fuse=fuse, verify=True,
             )({"n": n, "x": x})["out"]
             np.testing.assert_array_equal(
                 np.asarray(got), np.asarray(ref),
@@ -211,7 +211,7 @@ def test_mesh_schedule_fuse_matrix_matches_reference(seed, inputs):
         for fuse in (False, True):
             got = api.autobatch(
                 prog, z, backend="pc", max_depth=64, max_steps=200_000,
-                schedule=schedule, fuse=fuse, mesh=2,
+                schedule=schedule, fuse=fuse, mesh=2, verify=True,
             )({"n": n, "x": x})["out"]
             np.testing.assert_array_equal(
                 np.asarray(got), np.asarray(ref),
@@ -242,7 +242,7 @@ def test_segmented_matches_single_shot_matrix(seed, seg):
             for fuse in (False, True):
                 fn = batching.autobatch(
                     prog, backend="pc", max_depth=64, max_steps=200_000,
-                    schedule=schedule, fuse=fuse, mesh=mesh,
+                    schedule=schedule, fuse=fuse, mesh=mesh, verify=True,
                 )
                 single = np.asarray(fn(n, x)["out"])
                 single_steps = int(fn.last_result.steps)

@@ -245,3 +245,85 @@ class TestFusionNoOpPrograms:
         np.testing.assert_array_equal(
             np.asarray(res.outputs[ir.qualify("fib", "out")]), FIB[n]
         )
+
+
+class TestFusionEdgeCases:
+    """Satellite edge cases: jump cycles, orphaned functions, re-fusion."""
+
+    @staticmethod
+    def _jump_only(terms: list[ir.LTerminator]) -> ir.LoweredProgram:
+        """A varless program whose blocks carry only the given terminators."""
+        return ir.LoweredProgram(
+            blocks=[
+                ir.LBlock(ops=[], term=t, label=f"b{i}")
+                for i, t in enumerate(terms)
+            ],
+            entry=0,
+            main_params=(),
+            main_outputs=(),
+            var_specs={},
+            stack_vars=frozenset(),
+            temp_vars=frozenset(),
+            func_entries={"main": 0},
+        )
+
+    def test_cyclic_jump_chain_terminates(self):
+        # 0 -> 1 -> 2 -> 1: an unconditional-jump cycle must not send the
+        # chain builder into an infinite walk, and the result must verify.
+        low = self._jump_only([ir.LJump(1), ir.LJump(2), ir.LJump(1)])
+        fused = fusion.fuse(low, verify=True)
+        srcs = {s for chain in fused.fused_from.values() for s in chain}
+        assert srcs == {0, 1, 2}  # nothing dropped, nothing invented
+        # Every block still terminates in a lowered terminator whose
+        # target exists (the cycle is preserved, just re-indexed).
+        assert all(b.term is not None for b in fused.blocks)
+
+    def test_self_loop_jump(self):
+        # 0 -> 1 -> 1: the tightest cycle.
+        low = self._jump_only([ir.LJump(1), ir.LJump(1)])
+        fused = fusion.fuse(low, verify=True)
+        srcs = {s for chain in fused.fused_from.values() for s in chain}
+        assert srcs == {0, 1}
+
+    def test_uncalled_function_body_survives_fusion(self):
+        # A registered function main never calls is dead weight, but its
+        # entry is pinned: fusion must keep it (and the program must still
+        # verify) rather than fusing through or dropping a root.
+        pb = frontend.ProgramBuilder()
+        orphan = pb.function(
+            "orphan", ["n"], ["out"], {"n": I32}, {"out": I32}
+        )
+        orphan.assign("out", lambda n: n * 2, ["n"])
+        orphan.return_()
+        pb.add(orphan)
+        fb = pb.function("main", ["n"], ["out"], {"n": I32}, {"out": I32})
+        fb.assign("out", lambda n: n + 1, ["n"])
+        fb.return_()
+        pb.add(fb)
+        prog = ir.Program(functions=pb.functions, main="main")
+        fused = fusion.fuse(lowering.lower(prog, verify=True), verify=True)
+        assert "orphan" in fused.func_entries
+        orphan_entry = fused.func_entries["orphan"]
+        assert fused.blocks[orphan_entry].term is not None
+        n = np.array([3, 10], np.int32)
+        vm = pc_vm.ProgramCounterVM(
+            fused, pc_vm.VMConfig(batch_size=2, max_depth=4)
+        )
+        res = vm.run({"main/n": n})
+        np.testing.assert_array_equal(
+            np.asarray(res.outputs["main/out"]), n + 1
+        )
+
+    def test_double_fusion_provenance_composes(self):
+        t, s = tiny_nuts()
+        low = lowering.lower(nuts.build_nuts_program(t, s))
+        once = fusion.fuse(low, verify=True)
+        twice = fusion.fuse(once, verify=True)
+        n_orig = len(low.blocks)
+        # Re-fusing a fused program keeps provenance in *original* (pre-
+        # fusion) indices: compose, don't nest.
+        for chain in twice.fused_from.values():
+            assert all(0 <= s_ < n_orig for s_ in chain)
+        covered = {s_ for c in twice.fused_from.values() for s_ in c}
+        covered_once = {s_ for c in once.fused_from.values() for s_ in c}
+        assert covered == covered_once

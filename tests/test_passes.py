@@ -1,0 +1,331 @@
+"""Tests for the pass pipeline, DCE, and static stack-depth bounding.
+
+Covers core/passes.py (Pass protocol, PassPipeline between-pass
+verification + debug pinpointing, DeadCodeElimination) and the
+interprocedural depth analysis surfaced through
+``batching.autobatch(max_depth=None)`` / ``fn.diagnostics()``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    analysis,
+    batching,
+    frontend,
+    fusion,
+    ir,
+    lowering,
+    passes,
+    pc_vm,
+)
+from repro.core.frontend import F32, I32
+
+from tests.test_core import FIB, build_fib, build_mutual, build_pow_loop
+
+
+def build_nested():
+    """main -> mid -> leaf: non-recursive but two calls deep."""
+    pb = frontend.ProgramBuilder()
+    leaf = pb.function("leaf", ["n"], ["out"], {"n": I32}, {"out": I32})
+    leaf.assign("out", lambda n: n + 1, ["n"])
+    leaf.return_()
+    pb.add(leaf)
+    mid = pb.function("mid", ["n"], ["out"], {"n": I32}, {"out": I32})
+    mid.call("leaf", ["n"], out="t")
+    mid.assign("out", lambda t: t + 1, ["t"])
+    mid.return_()
+    pb.add(mid)
+    fb = pb.function("top", ["n"], ["out"], {"n": I32}, {"out": I32})
+    fb.call("mid", ["n"], out="out")
+    fb.return_()
+    pb.add(fb)
+    return ir.Program(functions=pb.functions, main="top")
+
+
+def build_with_dead_code():
+    """A loop program with a dead value that crosses blocks (so it holds a
+    masked VM state buffer, not a block-local temp) and a dead *tagged*
+    primitive (which DCE must keep for tag_stats)."""
+    pb = frontend.ProgramBuilder()
+    fb = pb.function(
+        "f", ["x", "k"], ["out"], {"x": F32, "k": I32}, {"out": F32}
+    )
+    fb.const(1.0, jnp.float32, out="out")
+    fb.copy("k", out="i")
+    # junk is written before the loop and read inside it: live across a
+    # block boundary, hence a state var — but its only consumer is itself
+    # dead, so the DCE fixpoint removes both ops and the junk buffer.
+    fb.prim(lambda x: x * 17.0, ["x"], out="junk", name="dead_junk")
+    with fb.while_(lambda i: i > 0, ["i"]):
+        fb.prim(lambda j: j + 1.0, ["junk"], out="junk2",
+                name="dead_junk2")
+        fb.prim(lambda x: x + 3.0, ["x"], out="probe", name="dead_probe",
+                tag="probe")
+        fb.assign("out", lambda o, x: o * x, ["out", "x"])
+        fb.assign("i", lambda i: i - 1, ["i"])
+    fb.return_()
+    pb.add(fb)
+    return pb.build()
+
+
+def prim_names(low: ir.LoweredProgram) -> list[str]:
+    return [
+        op.name
+        for blk in low.blocks
+        for op in blk.ops
+        if isinstance(op, ir.LPrim)
+    ]
+
+
+def break_a_target(low: ir.LoweredProgram) -> ir.LoweredProgram:
+    blocks = [
+        ir.LBlock(ops=list(b.ops), term=b.term, label=b.label)
+        for b in low.blocks
+    ]
+    blocks[0].term = ir.LJump(999)
+    return ir.dataclass_replace(low, blocks=blocks)
+
+
+class _BreakTargetPass:
+    name = "break-target"
+
+    def run(self, lowered):
+        return break_a_target(lowered)
+
+
+class _CrashPass:
+    name = "boom-pass"
+
+    def run(self, lowered):
+        raise RuntimeError("boom")
+
+
+class TestPassPipeline:
+    def test_builtin_passes_satisfy_protocol(self):
+        for p in (*passes.lowering_passes(), *passes.fusion_passes(),
+                  passes.DeadCodeElimination()):
+            assert isinstance(p, passes.Pass)
+            assert isinstance(p.name, str) and p.name
+
+    def test_fusion_pipeline_matches_fuse(self):
+        low = lowering.lower(build_fib())
+        via_fuse = fusion.fuse(low)
+        via_pipe = passes.PassPipeline(passes.fusion_passes()).run(low)
+        assert via_pipe.pretty() == via_fuse.pretty()
+        assert via_pipe.stack_vars == via_fuse.stack_vars
+        assert via_pipe.temp_vars == via_fuse.temp_vars
+        assert via_pipe.fused_from == via_fuse.fused_from
+
+    def test_pipeline_does_not_mutate_input(self):
+        low = lowering.lower(build_fib())
+        before = low.pretty()
+        passes.PassPipeline(
+            [*passes.fusion_passes(), passes.DeadCodeElimination()]
+        ).run(low)
+        assert low.pretty() == before
+
+    def test_verifier_names_offending_pass(self):
+        low = lowering.lower(build_fib())
+        pipe = passes.PassPipeline(
+            [passes.JumpChainFusion(), _BreakTargetPass()], verify=True
+        )
+        with pytest.raises(
+            passes.PassError,
+            match="pass 'break-target' produced an invalid program: "
+            ".*out of range",
+        ):
+            pipe.run(low)
+
+    def test_debug_mode_dumps_offending_program(self):
+        low = lowering.lower(build_fib())
+        pipe = passes.PassPipeline(
+            [_BreakTargetPass()], verify=True, debug=True
+        )
+        with pytest.raises(passes.PassError) as exc:
+            pipe.run(low)
+        assert "--- offending program ---" in str(exc.value)
+        assert "jump 999" in str(exc.value)  # the broken terminator
+
+    def test_crashing_pass_is_named(self):
+        low = lowering.lower(build_fib())
+        pipe = passes.PassPipeline([_CrashPass()])
+        with pytest.raises(
+            passes.PassError, match="pass 'boom-pass' failed: boom"
+        ):
+            pipe.run(low)
+
+    def test_invalid_input_rejected_before_any_pass(self):
+        bad = break_a_target(lowering.lower(build_fib()))
+        pipe = passes.PassPipeline([passes.JumpChainFusion()], verify=True)
+        with pytest.raises(
+            passes.PassError,
+            match=r"input program \(before any pass ran\) produced an "
+            "invalid program",
+        ):
+            pipe.run(bad)
+
+    def test_verify_off_by_default(self):
+        # Without verify=, the pipeline is pure transformation — a broken
+        # program flows through an empty pipeline untouched.
+        bad = break_a_target(lowering.lower(build_fib()))
+        assert passes.PassPipeline([]).run(bad) is bad
+
+
+class TestDeadCodeElimination:
+    def test_removes_dead_untagged_keeps_dead_tagged(self):
+        low = lowering.lower(build_with_dead_code())
+        assert "dead_junk" in prim_names(low)
+        assert "dead_junk2" in prim_names(low)
+        after = passes.DeadCodeElimination().run(low)
+        # dead_junk only dies once its (dead) consumer is gone: fixpoint.
+        assert "dead_junk" not in prim_names(after)
+        assert "dead_junk2" not in prim_names(after)
+        # Tagged primitives feed the tag_stats instrumentation contract:
+        assert "dead_probe" in prim_names(after)
+
+    def test_shrinks_vm_state(self):
+        low = lowering.lower(build_with_dead_code())
+        after = passes.DeadCodeElimination().run(low)
+        assert "f/junk" in low.var_specs
+        assert "f/junk" not in after.var_specs
+        state = lambda p: {v for v in p.var_specs if v not in p.temp_vars}
+        assert state(after) < state(low)
+
+    def test_noop_on_dense_program(self):
+        # fib's lowering has no dead compute (every prim feeds the result).
+        low = fusion.fuse(lowering.lower(build_fib()))
+        after = passes.DeadCodeElimination().run(low)
+        assert prim_names(after) == prim_names(low)
+
+    def test_outputs_bit_exact_with_and_without_dce(self):
+        x = np.array([1.5, 2.0, 0.5, 3.0], np.float32)
+        k = np.array([3, 0, 4, 2], np.int32)
+        outs = {}
+        for dce in (False, True):
+            fn = batching.autobatch(
+                build_with_dead_code(), backend="pc", verify=True, dce=dce
+            )
+            outs[dce] = np.asarray(fn(x, k)["out"])
+        np.testing.assert_array_equal(outs[False], outs[True])
+
+    def test_autobatch_defaults_to_dce(self):
+        fn = batching.autobatch(build_with_dead_code(), backend="pc")
+        assert fn.dce is True
+        assert "dead_junk" not in prim_names(fn.lowered)
+
+
+class TestStackDepthBound:
+    def test_loop_program_needs_depth_one(self):
+        rep = analysis.stack_depth_bound(lowering.lower(build_pow_loop()))
+        assert rep.recursive_cycle is None
+        assert rep.required_max_depth == 1  # no calls: pc never pushed
+
+    def test_nested_calls_bound(self):
+        rep = analysis.stack_depth_bound(lowering.lower(build_nested()))
+        assert rep.recursive_cycle is None
+        assert rep.pc_depth == 2  # top -> mid -> leaf
+        assert rep.required_max_depth == 3
+        assert rep.required_max_depth <= 32
+
+    def test_recursive_cycle_named(self):
+        rep = analysis.stack_depth_bound(lowering.lower(build_fib()))
+        assert rep.required_max_depth is None
+        assert rep.recursive_cycle == ("fib",)
+
+    def test_mutual_recursion_cycle_named(self):
+        rep = analysis.stack_depth_bound(lowering.lower(build_mutual()))
+        assert rep.recursive_cycle is not None
+        assert set(rep.recursive_cycle) == {"is_even", "is_odd"}
+
+    def test_fusion_preserves_bound(self):
+        low = lowering.lower(build_nested())
+        assert (
+            analysis.stack_depth_bound(fusion.fuse(low)).required_max_depth
+            == analysis.stack_depth_bound(low).required_max_depth
+        )
+
+
+class TestResolvedMaxDepth:
+    def test_inferred_bound_is_sufficient(self):
+        # max_depth=None runs the statically inferred bound end-to-end.
+        fn = batching.autobatch(build_nested(), backend="pc", verify=True)
+        assert fn.max_depth is None
+        assert fn.resolved_max_depth == 3
+        n = np.array([1, 5, 9], np.int32)
+        np.testing.assert_array_equal(np.asarray(fn(n)["out"]), n + 2)
+
+    def test_loop_program_runs_at_depth_one(self):
+        fn = batching.autobatch(build_pow_loop(), backend="pc")
+        assert fn.resolved_max_depth == 1
+        x = np.array([1.5, 2.0], np.float32)
+        k = np.array([3, 4], np.int32)
+        np.testing.assert_allclose(
+            np.asarray(fn(x, k)["out"]), x.astype(np.float64) ** k,
+            rtol=1e-6,
+        )
+
+    def test_recursive_falls_back_to_default(self):
+        fn = batching.autobatch(build_fib(), backend="pc")
+        assert fn.resolved_max_depth == batching.DEFAULT_MAX_DEPTH == 32
+        n = np.array([0, 5, 9, 12], np.int32)
+        np.testing.assert_array_equal(np.asarray(fn(n)["out"]), FIB[n])
+
+    def test_explicit_max_depth_wins(self):
+        fn = batching.autobatch(build_fib(), backend="pc", max_depth=20)
+        assert fn.resolved_max_depth == 20
+
+    def test_overflow_hint_names_inferred_bound(self):
+        fn = batching.autobatch(build_nested(), backend="pc", max_depth=1)
+        with pytest.raises(
+            pc_vm.StackOverflow,
+            match="statically inferred bound for this program is "
+            "max_depth=3",
+        ):
+            fn(np.array([4], np.int32))
+
+    def test_overflow_hint_names_recursive_cycle(self):
+        fn = batching.autobatch(build_fib(), backend="pc", max_depth=3)
+        with pytest.raises(
+            pc_vm.StackOverflow,
+            match=r"recursive \(fib -> fib\).*pass a larger max_depth",
+        ):
+            fn(np.array([12], np.int32))
+
+
+class TestDiagnostics:
+    def test_recursive_program_report(self):
+        fn = batching.autobatch(build_fib(), backend="pc", verify=True)
+        d = fn.diagnostics()
+        assert d.verified and d.verification_error is None
+        assert d.fused and d.num_source_blocks >= d.num_blocks
+        assert d.recursive_cycle == ("fib",)
+        txt = d.pretty()
+        assert "verifier:      ok" in txt
+        assert "unbounded (recursive cycle fib -> fib)" in txt
+
+    def test_static_bound_report(self):
+        fn = batching.autobatch(build_nested(), backend="pc")
+        d = fn.diagnostics()
+        assert d.required_max_depth == 3
+        assert "stack bound:   max_depth=3" in d.pretty()
+
+    def test_dead_state_reported(self):
+        fn = batching.autobatch(
+            build_with_dead_code(), backend="pc", dce=False
+        )
+        d = fn.diagnostics()
+        assert d.dead_ops >= 1
+        assert "f/junk" in d.dead_state_vars
+
+    def test_requires_pc_backend(self):
+        fn = batching.autobatch(build_fib(), backend="local")
+        with pytest.raises(ValueError, match="requires the 'pc' backend"):
+            fn.diagnostics()
+
+    def test_diagnose_reports_verification_failure(self):
+        bad = break_a_target(lowering.lower(build_fib()))
+        d = passes.diagnose(bad)
+        assert not d.verified
+        assert "out of range" in d.verification_error
+        assert "verifier:      FAILED" in d.pretty()

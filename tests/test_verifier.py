@@ -1,0 +1,315 @@
+"""Mutation tests for the lowered-IR verifier (core/verifier.py).
+
+One test per invariant class: take a *valid* lowered program, corrupt it
+in exactly one way, and assert the verifier rejects it with a message
+naming the offending block/variable.  Plus the positive direction: the
+unmutated example programs (and the NUTS program, the paper's
+experiment) pass the full verifier after every pass of the pipeline.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import frontend, fusion, ir, lowering, passes, verifier
+from repro.core.frontend import I32
+
+from tests.test_core import build_fib, build_mutual, build_pow_loop
+
+
+def copy_lowered(low: ir.LoweredProgram) -> ir.LoweredProgram:
+    """A structurally independent copy safe to mutate in place."""
+    return ir.dataclass_replace(
+        low,
+        blocks=[
+            ir.LBlock(ops=list(b.ops), term=b.term, label=b.label)
+            for b in low.blocks
+        ],
+        var_specs=dict(low.var_specs),
+        func_entries=dict(low.func_entries),
+        fused_from=None if low.fused_from is None else dict(low.fused_from),
+    )
+
+
+@pytest.fixture
+def fib_low():
+    return lowering.lower(build_fib())
+
+
+class TestStructure:
+    def test_valid_program_passes(self, fib_low):
+        verifier.verify(fib_low)  # does not raise
+
+    def test_out_of_range_target(self, fib_low):
+        bad = copy_lowered(fib_low)
+        bad.blocks[1].term = ir.LJump(999)
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"block 1 .*terminator target 999 is out of range",
+        ):
+            verifier.verify(bad)
+
+    def test_entry_must_be_function_entry(self, fib_low):
+        non_entry = next(
+            i
+            for i in range(len(fib_low.blocks))
+            if i not in set(fib_low.func_entries.values())
+        )
+        bad = ir.dataclass_replace(copy_lowered(fib_low), entry=non_entry)
+        with pytest.raises(
+            verifier.VerificationError, match="is not a function entry"
+        ):
+            verifier.verify(bad)
+
+    def test_pushjump_must_target_function_entry(self, fib_low):
+        bad = copy_lowered(fib_low)
+        entries = set(bad.func_entries.values())
+        i, t = next(
+            (i, b.term)
+            for i, b in enumerate(bad.blocks)
+            if isinstance(b.term, ir.LPushJump)
+        )
+        non_entry = next(
+            j for j in range(len(bad.blocks)) if j not in entries
+        )
+        bad.blocks[i].term = ir.LPushJump(target=non_entry, ret=t.ret)
+        with pytest.raises(
+            verifier.VerificationError,
+            match=rf"pushjump target {non_entry} is not a function entry",
+        ):
+            verifier.verify(bad)
+
+    def test_empty_program_rejected(self, fib_low):
+        bad = ir.dataclass_replace(copy_lowered(fib_low), blocks=[])
+        with pytest.raises(
+            verifier.VerificationError, match="program has no blocks"
+        ):
+            verifier.verify(bad)
+
+
+class TestReachability:
+    def test_unreachable_ret_site_rejected(self, fib_low):
+        # Returning straight out of the entry block orphans the function
+        # body — including the pinned call-return sites.
+        bad = copy_lowered(fib_low)
+        bad.blocks[bad.entry].term = ir.LReturn()
+        with pytest.raises(
+            verifier.VerificationError,
+            match="unreachable from the control roots",
+        ):
+            verifier.verify(bad)
+
+
+class TestStackBalance:
+    def test_extra_push_unbalanced(self, fib_low):
+        bad = copy_lowered(fib_low)
+        v = sorted(bad.stack_vars)[0]
+        # Duplicate an existing push somewhere on the path to a return:
+        i, op = next(
+            (i, op)
+            for i, b in enumerate(bad.blocks)
+            for op in b.ops
+            if isinstance(op, ir.LPush) and op.var == v
+        )
+        bad.blocks[i].ops.append(op)
+        with pytest.raises(
+            verifier.VerificationError, match="stack balance:"
+        ):
+            verifier.verify(bad)
+
+    def test_pop_below_frame_floor(self, fib_low):
+        bad = copy_lowered(fib_low)
+        v = sorted(bad.stack_vars)[0]
+        bad.blocks[bad.entry].ops.insert(0, ir.LPop(v))
+        with pytest.raises(
+            verifier.VerificationError,
+            match=rf"stack balance: .*{v}.*below the frame's stack floor",
+        ):
+            verifier.verify(bad)
+
+
+class TestVarClasses:
+    def test_stack_vars_must_match_ops(self, fib_low):
+        bad = ir.dataclass_replace(
+            copy_lowered(fib_low),
+            stack_vars=fib_low.stack_vars | {"fib/bogus"},
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"stack_vars is not exactly the pushed/popped set: "
+            r"missing \[\], extra \['fib/bogus'\]",
+        ):
+            verifier.verify(bad)
+
+    def test_temp_cannot_be_main_io(self, fib_low):
+        io = next(  # pick an I/O var that is not also a stack var
+            v
+            for v in (*fib_low.main_params, *fib_low.main_outputs)
+            if v not in fib_low.stack_vars
+        )
+        bad = ir.dataclass_replace(
+            copy_lowered(fib_low), temp_vars=fib_low.temp_vars | {io}
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match="temp_vars include main params/outputs",
+        ):
+            verifier.verify(bad)
+
+    def test_temp_read_before_write(self, fib_low):
+        bad = copy_lowered(fib_low)
+        t = sorted(bad.temp_vars)[0]
+        i = next(
+            i
+            for i, b in enumerate(bad.blocks)
+            if any(t in ir.prim_writes(op) for op in b.ops)
+        )
+        bad.blocks[i].ops.insert(
+            0, ir.LPrim(outs=(t,), fn=lambda x: x, ins=(t,), name="bad")
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=rf"temp var '{t}' is read before any write",
+        ):
+            verifier.verify(bad)
+
+
+class TestSpecs:
+    def test_prim_output_spec_mismatch(self, fib_low):
+        bad = copy_lowered(fib_low)
+        # fib/out is written by primitives but never pushed, so the first
+        # check to trip is the eval_shape one.
+        bad.var_specs["fib/out"] = jax.ShapeDtypeStruct((3,), jnp.float32)
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"writes 'fib/out' as .* but var_specs declares",
+        ):
+            verifier.verify(bad)
+
+    def test_missing_var_spec(self, fib_low):
+        bad = copy_lowered(fib_low)
+        v = sorted(bad.temp_vars)[0]  # mentioned, but not main I/O
+        del bad.var_specs[v]
+        with pytest.raises(
+            verifier.VerificationError,
+            match=rf"variable '{v}' has no var_specs entry",
+        ):
+            verifier.verify(bad)
+
+    def test_push_spec_mix(self):
+        # Handcrafted minimal program: the only spec defect is the push
+        # whose source buffer is typed differently from its stack.
+        low = ir.LoweredProgram(
+            blocks=[
+                ir.LBlock(
+                    ops=[ir.LPush("main/v", "main/w"), ir.LPop("main/v")],
+                    term=ir.LReturn(),
+                    label="main",
+                )
+            ],
+            entry=0,
+            main_params=("main/w",),
+            main_outputs=("main/w",),
+            var_specs={
+                "main/v": jax.ShapeDtypeStruct((), jnp.int32),
+                "main/w": jax.ShapeDtypeStruct((2,), jnp.float32),
+            },
+            stack_vars=frozenset({"main/v"}),
+            temp_vars=frozenset(),
+            func_entries={"main": 0},
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"push main/v <- main/w mixes specs",
+        ):
+            verifier.verify(low)
+
+    def test_check_specs_false_skips_type_checking(self, fib_low):
+        bad = copy_lowered(fib_low)
+        bad.var_specs["fib/out"] = jax.ShapeDtypeStruct((3,), jnp.float32)
+        verifier.verify(bad, check_specs=False)  # does not raise
+
+
+class TestProvenance:
+    @pytest.fixture
+    def fused(self, fib_low):
+        return fusion.fuse(fib_low)
+
+    def test_fused_program_passes(self, fused):
+        verifier.verify(fused)
+
+    def test_missing_key(self, fused):
+        bad = copy_lowered(fused)
+        del bad.fused_from[0]
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"fused_from keys are not exactly 0\.\.",
+        ):
+            verifier.verify(bad)
+
+    def test_empty_sources(self, fused):
+        bad = copy_lowered(fused)
+        bad.fused_from[1] = ()
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"fused_from\[1\] is empty",
+        ):
+            verifier.verify(bad)
+
+    def test_duplicate_chain_head(self, fused):
+        bad = copy_lowered(fused)
+        bad.fused_from[1] = bad.fused_from[0]
+        with pytest.raises(
+            verifier.VerificationError,
+            match="both claim original block .* as their chain head",
+        ):
+            verifier.verify(bad)
+
+    def test_repeated_source(self, fused):
+        bad = copy_lowered(fused)
+        srcs = bad.fused_from[0]
+        bad.fused_from[0] = srcs + (srcs[0],)
+        with pytest.raises(
+            verifier.VerificationError, match="repeats a source block"
+        ):
+            verifier.verify(bad)
+
+
+class TestUnmutatedProgramsVerifyClean:
+    """The positive direction: real programs pass after *every* pass."""
+
+    @pytest.mark.parametrize(
+        "build", [build_fib, build_pow_loop, build_mutual]
+    )
+    def test_examples_full_pipeline(self, build):
+        low = lowering.lower(build(), verify=True)
+        pipe = list(passes.fusion_passes()) + [passes.DeadCodeElimination()]
+        passes.PassPipeline(pipe, verify=True, debug=True).run(low)
+
+    def test_nuts_full_pipeline(self):
+        from repro.mcmc import nuts, targets
+
+        t = targets.isotropic_gaussian(2)
+        s = nuts.NutsSettings(
+            max_tree_depth=3, num_steps=2, steps_per_leaf=2
+        )
+        prog = nuts.build_nuts_program(t, s)
+        low = lowering.lower(prog, verify=True)
+        pipe = list(passes.fusion_passes()) + [passes.DeadCodeElimination()]
+        fused = passes.PassPipeline(pipe, verify=True, debug=True).run(low)
+        verifier.verify(fused)
+
+    def test_error_is_value_error(self):
+        # Callers catching ValueError (the lowering's historical error
+        # type) also catch verifier rejections.
+        assert issubclass(verifier.VerificationError, ValueError)
+
+    def test_builder_loop_program(self):
+        pb = frontend.ProgramBuilder()
+        fb = pb.function("count", ["n"], ["out"], {"n": I32}, {"out": I32})
+        fb.const(0, jnp.int32, out="out")
+        with fb.while_(lambda n, out: out < n, ["n", "out"]):
+            fb.assign("out", lambda o: o + 1, ["out"])
+        fb.return_()
+        pb.add(fb)
+        low = lowering.lower(pb.build(), verify=True)
+        verifier.verify(fusion.fuse(low, verify=True))
