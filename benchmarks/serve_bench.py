@@ -12,8 +12,18 @@ Two modes:
   arrival-to-finish latency and lane occupancy, next to a batch-mode
   (all-at-once) run of the same request set for the closed-loop contrast.
 
-``--json PATH`` writes machine-readable records (strict JSON — NaN is
-serialized as ``null``).
+``--chaos`` layers fault injection on the poisson stream: a
+``--chaos-rate`` fraction of requests carry NaN-poisoning or livelock
+sentinel prompts (``tools/chaos.py ChaosModel``) and the engine runs
+under ``on_fault="quarantine"`` + ``detect_nonfinite`` + a calibrated
+``lane_step_budget`` watchdog, with one retry per faulted request.  The
+sweep reports error/retry/shed/timeout rates next to p50/p99, asserts
+every request resolves to a terminal ``Completion.status``, and checks
+healthy requests' tokens are bit-exact with a chaos-free serve.
+
+``--seed`` makes the Poisson stream reproducible (threaded into the JSON
+record).  ``--json PATH`` writes machine-readable records (strict JSON —
+NaN is serialized as ``null``).
 """
 from __future__ import annotations
 
@@ -41,12 +51,12 @@ def _load_model():
 
 def _engine(cfg, model, params, lanes: int, *, max_new: int,
             prompt_len: int, requests_per_lane: int, mesh,
-            segment_steps: int = 64):
+            segment_steps: int = 64, **fault_knobs):
     ecfg = EngineConfig(
         lanes=lanes, max_context=prompt_len + max_new + 2,
         max_prompt_len=prompt_len, max_new_tokens=max_new,
         requests_per_lane=requests_per_lane, eos_id=0, backend="pc",
-        mesh=mesh, segment_steps=segment_steps,
+        mesh=mesh, segment_steps=segment_steps, **fault_knobs,
     )
     return GenerationEngine(model, params, ecfg)
 
@@ -119,7 +129,7 @@ def poisson_requests(num: int, rate: float, prompt_len: int,
 def open_loop_sweep(lane_counts: list[int], *, rate: float,
                     num_requests: int, segment_steps: int,
                     max_new: int = 16, prompt_len: int = 8,
-                    mesh=None) -> tuple[Table, list[dict]]:
+                    mesh=None, seed: int = 0) -> tuple[Table, list[dict]]:
     """Open-loop (Poisson) vs batch (all-at-once) continuous serving."""
     tab = Table(
         f"Serve engine, open loop — Poisson arrivals at {rate} req/s vs "
@@ -140,7 +150,7 @@ def open_loop_sweep(lane_counts: list[int], *, rate: float,
                       prompt_len=prompt_len, requests_per_lane=1,
                       mesh=mesh, segment_steps=segment_steps)
         reqs = poisson_requests(num_requests, rate, prompt_len,
-                                cfg.vocab_size)
+                                cfg.vocab_size, seed=seed)
         # Warm-up: compile the stepper path on a tiny closed run.
         eng.serve([Request(rid=0, prompt=np.array([1], np.int32))])
         for mode in ("poisson", "batch"):
@@ -155,12 +165,158 @@ def open_loop_sweep(lane_counts: list[int], *, rate: float,
             records.append({
                 "mode": mode, "lanes": lanes, "mesh": mesh or 1,
                 "rate": rate if mode == "poisson" else None,
-                "num_requests": num_requests,
+                "seed": seed, "num_requests": num_requests,
                 "segment_steps": segment_steps, "tok_s": tok_s,
                 "p50_latency_s": p50, "p99_latency_s": p99,
                 "occupancy": stats.occupancy, "segments": stats.segments,
                 "vm_steps": stats.vm_steps,
             })
+    return tab, records
+
+
+def chaos_requests(num: int, rate: float, chaos_rate: float,
+                   prompt_len: int, vocab: int,
+                   seed: int) -> tuple[list[Request], dict[int, str]]:
+    """A Poisson stream where ``chaos_rate`` of the requests carry fault
+    sentinels: ``vocab-1`` = NaN-poison prompt, ``vocab-2`` = livelock
+    prompt (alternating).  Returns ``(requests, {rid: fault_kind})``."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=num))
+    n_fault = max(int(round(num * chaos_rate)), 2) if chaos_rate else 0
+    fault_rids = rng.choice(num, size=min(n_fault, num - 1),
+                            replace=False)
+    injected = {
+        int(rid): ("nonfinite" if i % 2 == 0 else "watchdog")
+        for i, rid in enumerate(fault_rids)
+    }
+    reqs = []
+    for i, t in enumerate(arrivals):
+        if injected.get(i) == "nonfinite":
+            prompt = np.array([vocab - 1], np.int32)
+        elif injected.get(i) == "watchdog":
+            prompt = np.array([vocab - 2], np.int32)
+        else:
+            # Healthy prompts avoid the two sentinel ids.
+            prompt = rng.integers(
+                1, vocab - 2, int(rng.integers(1, prompt_len + 1))
+            ).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, arrival=float(t)))
+    return reqs, injected
+
+
+def chaos_sweep(lane_counts: list[int], *, rate: float, chaos_rate: float,
+                num_requests: int, segment_steps: int,
+                max_new: int = 64, prompt_len: int = 6,
+                mesh=None, seed: int = 0) -> tuple[Table, list[dict]]:
+    """Fault-injected open-loop serving under quarantine.
+
+    Chaos-free serve of the healthy subset first (same rids, same
+    arrivals), then the full injected stream through a fresh engine with
+    identical knobs — healthy requests must come back bit-exact, every
+    request must resolve to a terminal status, and the engine must never
+    abort.  Records carry a ``violations`` list; the CLI exits non-zero
+    if any cell has one.
+    """
+    from tools.chaos import ChaosModel
+
+    tab = Table(
+        f"Serve engine, chaos — {chaos_rate:.0%} of {rate} req/s poisson "
+        "arrivals fault (NaN-poison / livelock), quarantine + watchdog",
+        ["lanes", "ok", "faulted", "timeout", "rejected", "retries",
+         "p50_s", "p99_s", "occupancy", "bitexact"],
+    )
+    records: list[dict] = []
+    cfg, model, params = _load_model()
+    cmodel = ChaosModel(model, eos_pos=prompt_len + 2)
+    knobs = dict(on_fault="quarantine", detect_nonfinite=True,
+                 max_attempts=2, retry_backoff_s=0.0)
+
+    # Calibrate the watchdog: a healthy request's per-lane executed
+    # dispatches are schedule- and batch-independent (a lane only counts
+    # dispatches it executes), so one fault-free 1-lane serve measures
+    # the healthy path length H.  Healthy lanes need <= H; a livelock
+    # lane needs ~ H * max_new / eos_pos >> 2H.  Budget = 2H.
+    cal = _engine(cfg, cmodel, params, 1, max_new=max_new,
+                  prompt_len=prompt_len, requests_per_lane=1, mesh=None,
+                  segment_steps=segment_steps, **knobs)
+    _, cal_stats = cal.serve(
+        [Request(rid=0, prompt=np.full((prompt_len,), 1, np.int32))]
+    )
+    budget = 2 * cal_stats.vm_steps
+    knobs["lane_step_budget"] = budget
+
+    for lanes in lane_counts:
+        if mesh and lanes % mesh:
+            tab.add(lanes, *([float("nan")] * 9))
+            records.append({"mode": "chaos", "lanes": lanes,
+                            "mesh": mesh, "skipped":
+                            "lanes do not divide across mesh"})
+            continue
+        reqs, injected = chaos_requests(
+            num_requests, rate, chaos_rate, prompt_len,
+            cfg.vocab_size, seed,
+        )
+        healthy = [r for r in reqs if r.rid not in injected]
+        eng = _engine(cfg, cmodel, params, lanes, max_new=max_new,
+                      prompt_len=prompt_len, requests_per_lane=1,
+                      mesh=mesh, segment_steps=segment_steps, **knobs)
+        base, _ = eng.serve(healthy)
+        base_tokens = {c.rid: c.tokens for c in base}
+        comps, stats = eng.serve(reqs)
+
+        violations: list[str] = []
+        if {c.rid for c in comps} != {r.rid for r in reqs}:
+            violations.append("not every request resolved terminally")
+        bad_status = [c.rid for c in comps
+                      if c.status not in
+                      ("ok", "faulted", "timeout", "rejected")]
+        if bad_status:
+            violations.append(f"non-terminal statuses at rids "
+                              f"{bad_status}")
+        not_contained = [c.rid for c in comps
+                         if c.rid in injected and c.status == "ok"]
+        if not_contained:
+            violations.append(
+                f"injected requests completed 'ok': {not_contained}"
+            )
+        bitexact = True
+        for c in comps:
+            if c.rid in injected or c.status != "ok":
+                continue
+            if not np.array_equal(c.tokens, base_tokens[c.rid]):
+                bitexact = False
+                violations.append(
+                    f"healthy rid {c.rid} tokens diverged from "
+                    "chaos-free run"
+                )
+                break
+        ok_lat = np.array([c.latency for c in comps
+                           if c.status == "ok"] or [float("nan")])
+        p50, p99 = (float(np.percentile(ok_lat, q)) for q in (50, 99))
+        n = len(reqs)
+        tab.add(lanes, stats.ok, stats.faulted, stats.timeout,
+                stats.rejected, stats.retries, p50, p99,
+                round(stats.occupancy, 3), bitexact)
+        records.append({
+            "mode": "chaos", "lanes": lanes, "mesh": mesh or 1,
+            "seed": seed, "rate": rate, "chaos_rate": chaos_rate,
+            "num_requests": n, "segment_steps": segment_steps,
+            "lane_step_budget": budget,
+            "injected": {k: sum(1 for v in injected.values() if v == k)
+                         for k in ("nonfinite", "watchdog")},
+            "statuses": {"ok": stats.ok, "faulted": stats.faulted,
+                         "timeout": stats.timeout,
+                         "rejected": stats.rejected},
+            "error_rate": stats.faulted / n,
+            "retry_rate": stats.retries / n,
+            "shed_rate": stats.rejected / n,
+            "timeout_rate": stats.timeout / n,
+            "retries": stats.retries,
+            "p50_latency_s": p50, "p99_latency_s": p99,
+            "occupancy": stats.occupancy,
+            "healthy_bitexact": bitexact,
+            "violations": violations,
+        })
     return tab, records
 
 
@@ -181,15 +337,30 @@ def main(argv=None) -> int:
     ap.add_argument("--segment-steps", type=int, default=64,
                     help="VM dispatches per segment between host "
                          "admission/retire checks")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="poisson/chaos arrival-stream seed "
+                         "(reproducible CI smokes)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injection sweep: poisson arrivals where "
+                         "--chaos-rate of the requests NaN-poison or "
+                         "livelock their lane (quarantine + watchdog)")
+    ap.add_argument("--chaos-rate", type=float, default=0.2,
+                    help="fraction of chaos requests that fault")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable records (strict JSON)")
     args = ap.parse_args(argv)
     lanes = [int(x) for x in args.lanes.split(",")]
     mesh = None if args.mesh.lower() in ("none", "0") else int(args.mesh)
-    if args.arrivals == "poisson":
+    if args.chaos:
+        tab, records = chaos_sweep(
+            lanes, rate=args.rate, chaos_rate=args.chaos_rate,
+            num_requests=args.num_requests,
+            segment_steps=args.segment_steps, mesh=mesh, seed=args.seed,
+        )
+    elif args.arrivals == "poisson":
         tab, records = open_loop_sweep(
             lanes, rate=args.rate, num_requests=args.num_requests,
-            segment_steps=args.segment_steps, mesh=mesh,
+            segment_steps=args.segment_steps, mesh=mesh, seed=args.seed,
         )
     else:
         tab, records = serve_sweep(lanes, mesh=mesh)
@@ -199,12 +370,18 @@ def main(argv=None) -> int:
             "benchmark": "serve_bench",
             "config": {"arrivals": args.arrivals, "lanes": lanes,
                        "mesh": mesh, "rate": args.rate,
+                       "seed": args.seed, "chaos": args.chaos,
+                       "chaos_rate": args.chaos_rate if args.chaos
+                       else None,
                        "num_requests": args.num_requests,
                        "segment_steps": args.segment_steps},
             "records": records,
         })
         print(f"[wrote {args.json}: {len(records)} records]")
-    return 0
+    violations = [v for r in records for v in r.get("violations", [])]
+    for v in violations:
+        print(f"[VIOLATION] {v}")
+    return 1 if violations else 0
 
 
 if __name__ == "__main__":

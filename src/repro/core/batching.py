@@ -37,8 +37,8 @@ Execution cache
 Tracing (frontend -> IR) happens once per decorated function; the pc
 backend's stack-explicit lowering happens once per *program*; per-batch-size
 executors and per-aval compiled artifacts are memoized under a
-``(backend, batch_size, schedule, fuse, verify, dce, mesh, input avals)``
-key.  ``cache_info()`` exposes the
+``(backend, batch_size, schedule, fuse, verify, dce, on_fault,
+detect_nonfinite, lane_step_budget, mesh, input avals)`` key.  ``cache_info()`` exposes the
 counters so callers (and tests) can prove that a repeat call at the same
 avals performs no re-trace, no re-lower, and no re-compile, and that a call
 at a *new* batch size reuses the lowering.
@@ -58,6 +58,7 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import (
     analysis,
@@ -156,15 +157,46 @@ def _raise_if_overflowed(
     out-of-range pushes) must never escape the pytree API.
 
     ``hint`` carries the static stack-depth analysis' guidance (the
-    inferred bound, or the recursive cycle that defeats it).
+    inferred bound, or the recursive cycle that defeats it).  The raised
+    :class:`pc_vm.StackOverflow` carries the per-lane evidence —
+    ``exc.depth_exceeded`` (the ``[batch]`` bool mask) and ``exc.lanes``
+    (the offending lane indices) — so callers can report *which* members
+    died.
     """
     if flags.any():
+        flags = np.asarray(flags)
+        lanes = np.flatnonzero(flags)
+        shown = ", ".join(str(i) for i in lanes[:8])
+        if len(lanes) > 8:
+            shown += ", ..."
         raise pc_vm.StackOverflow(
-            f"pc/variable stack overflow: {int(flags.sum())} of "
-            f"{batch_size} batch members exceeded max_depth={max_depth}; "
-            "their results would be invalid (out-of-range pushes are "
-            "dropped). "
-            + (hint or "Pass a larger max_depth= to autobatch().")
+            f"pc/variable stack overflow: {len(lanes)} of "
+            f"{batch_size} batch members exceeded max_depth={max_depth} "
+            f"(lanes {shown}); their results would be invalid "
+            "(out-of-range pushes are dropped). "
+            + (hint or "Pass a larger max_depth= to autobatch()."),
+            depth_exceeded=flags,
+            lanes=lanes,
+        )
+
+
+def _raise_if_faulted(codes, batch_size: int) -> None:
+    """Shared gate for NONFINITE/WATCHDOG faults under ``on_fault="raise"``:
+    the batch is aborted with the per-lane evidence on the exception."""
+    codes = np.asarray(codes)
+    bad = codes >= pc_vm.FAULT_NONFINITE
+    if bad.any():
+        lanes = np.flatnonzero(bad)
+        kinds = sorted({pc_vm.FAULT_NAMES[int(codes[i])] for i in lanes})
+        shown = ", ".join(str(i) for i in lanes[:8])
+        if len(lanes) > 8:
+            shown += ", ..."
+        raise pc_vm.LaneFault(
+            f"lane fault ({'/'.join(kinds)}): {len(lanes)} of {batch_size} "
+            f"batch members faulted (lanes {shown}); their results would "
+            "be invalid. Pass on_fault='quarantine' to autobatch() to "
+            "contain faults per lane instead of aborting the batch.",
+            fault_codes=codes,
         )
 
 
@@ -183,13 +215,24 @@ class _PcExecutor:
     def run(self, inputs: dict[str, Any]) -> dict[str, Any]:
         res = self.vm.run(self._qualify(inputs))
         self.last_result = res
-        if res.depth_exceeded is not None:
-            # Deliberate device sync before returning results.
-            _raise_if_overflowed(
-                jax.device_get(res.depth_exceeded),
-                self.batch_size, self.vm.config.max_depth,
-                self.overflow_hint,
-            )
+        if self.vm.config.on_fault == "raise":
+            # Batch-fatal policy (the historical default): a deliberate
+            # device sync before results escape the pytree API.  Under
+            # "quarantine" nothing raises — faulted lanes are flagged in
+            # last_result.fault_code and healthy lanes stay exact.
+            if res.depth_exceeded is not None:
+                _raise_if_overflowed(
+                    jax.device_get(res.depth_exceeded),
+                    self.batch_size, self.vm.config.max_depth,
+                    self.overflow_hint,
+                )
+            cfg = self.vm.config
+            if res.fault_code is not None and (
+                cfg.detect_nonfinite or cfg.lane_step_budget is not None
+            ):
+                _raise_if_faulted(
+                    jax.device_get(res.fault_code), self.batch_size
+                )
         return {k.split("/", 1)[1]: v for k, v in res.outputs.items()}
 
     def lower(self, inputs: dict[str, Any]):
@@ -342,15 +385,39 @@ class Stepper:
         """``[batch]`` bool: which lanes have halted."""
         return self.vm.lane_done(state)
 
+    def fault_code(self, state: dict) -> jax.Array:
+        """``[batch]`` i32 per-lane fault codes (``pc_vm.FAULT_NAMES``)."""
+        return self.vm.lane_fault(state)
+
+    def lane_faulted(self, state: dict) -> jax.Array:
+        """``[batch]`` bool: which lanes have faulted (overflow /
+        non-finite write / watchdog).  Faulted lanes never advance again
+        under ``on_fault="quarantine"``; ``inject`` resets them."""
+        return self.vm.lane_faulted(state)
+
     def done(self, state: dict) -> bool:
         """True once the VM cannot advance this snapshot any further
-        (device sync): every lane has halted, or the ``max_steps`` budget
-        is exhausted — exactly when a single-shot call would return, so
-        the ``while not st.done(state)`` drive loop terminates whenever
-        ``fn(*args)`` would (check ``lane_done`` to tell the two apart).
+        (device sync): every lane has halted or faulted, or the
+        ``max_steps`` budget is exhausted — exactly when a single-shot
+        call would return, so the ``while not st.done(state)`` drive loop
+        terminates whenever ``fn(*args)`` would (check ``lane_done`` /
+        ``lane_faulted`` to tell the cases apart).
         """
-        if bool(jax.device_get(jnp.all(self.vm.lane_done(state)))):
+        terminal = jnp.logical_or(
+            self.vm.lane_done(state), self.vm.lane_faulted(state)
+        )
+        if bool(jax.device_get(jnp.all(terminal))):
             return True
+        cfg = self.vm.config
+        if cfg.on_fault == "raise" and (
+            cfg.detect_nonfinite or cfg.lane_step_budget is not None
+        ):
+            # Fail-fast policy: the VM loop halts the whole batch at the
+            # first detector fault, so no lane will ever advance again —
+            # the snapshot is done (result() will raise LaneFault).
+            codes = jax.device_get(self.fault_code(state))
+            if bool((codes >= pc_vm.FAULT_NONFINITE).any()):
+                return True
         return self.steps(state) >= self.vm.config.max_steps
 
     def steps(self, state: dict) -> int:
@@ -394,16 +461,26 @@ class Stepper:
         )
 
     def result(self, state: dict) -> Any:
-        """Final outputs with the overflow check of a plain call.
+        """Final outputs with the fault checks of a plain call.
 
-        Raises :class:`pc_vm.StackOverflow` if any lane's stacks exceeded
-        ``max_depth`` (their results would be silently invalid).
+        Under ``on_fault="raise"`` raises :class:`pc_vm.StackOverflow` if
+        any lane's stacks exceeded ``max_depth``, or
+        :class:`pc_vm.LaneFault` if an enabled detector (non-finite /
+        watchdog) tripped — their results would be silently invalid.
+        Under ``on_fault="quarantine"`` never raises: inspect
+        ``fault_code(state)`` for the per-lane verdicts.
         """
-        _raise_if_overflowed(
-            jax.device_get(state["depth_exceeded"]),
-            self.batch_size, self.vm.config.max_depth,
-            self._ex.overflow_hint,
-        )
+        cfg = self.vm.config
+        if cfg.on_fault == "raise":
+            _raise_if_overflowed(
+                jax.device_get(state["depth_exceeded"]),
+                self.batch_size, cfg.max_depth,
+                self._ex.overflow_hint,
+            )
+            if cfg.detect_nonfinite or cfg.lane_step_budget is not None:
+                _raise_if_faulted(
+                    jax.device_get(state["fault_code"]), self.batch_size
+                )
         return self.outputs(state)
 
 
@@ -452,12 +529,19 @@ class AutobatchedFunction:
         mesh: Any = None,
         verify: bool = False,
         dce: bool = False,
+        on_fault: str = "raise",
+        detect_nonfinite: bool = False,
+        lane_step_budget: Optional[int] = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         if schedule not in pc_vm.SCHEDULES:
             raise ValueError(
                 f"schedule must be one of {pc_vm.SCHEDULES}, got {schedule!r}"
+            )
+        if on_fault not in pc_vm.ON_FAULT:
+            raise ValueError(
+                f"on_fault must be one of {pc_vm.ON_FAULT}, got {on_fault!r}"
             )
         self.registry = registry
         self.main = main
@@ -468,6 +552,9 @@ class AutobatchedFunction:
         self.mesh = mesh
         self.verify = verify
         self.dce = dce
+        self.on_fault = on_fault
+        self.detect_nonfinite = detect_nonfinite
+        self.lane_step_budget = lane_step_budget
         self.max_depth = max_depth  # None: use the static bound (pc)
         # Resolved lazily (resolving may initialize the jax backend, which
         # a decorator at module import time must not do).
@@ -480,6 +567,8 @@ class AutobatchedFunction:
         self._vm_opts = dict(
             max_steps=max_steps, use_kernel=use_kernel,
             collect_block_stats=collect_stats, schedule=schedule, mesh=mesh,
+            on_fault=on_fault, detect_nonfinite=detect_nonfinite,
+            lane_step_budget=lane_step_budget,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
@@ -732,9 +821,10 @@ class AutobatchedFunction:
         # Note: _bind forces every leaf to (z,)+spec.shape / spec.dtype, so
         # today these keys collapse to the batch size; they are kept in
         # full aval form so the cache contract survives future shape- or
-        # dtype-polymorphic specs.  schedule/fuse/mesh are fixed per wrapper
-        # but belong to the key contract: two wrappers over the same program
-        # with different knobs must never share a compiled executor.
+        # dtype-polymorphic specs.  schedule/fuse/mesh and the fault knobs
+        # are fixed per wrapper but belong to the key contract: two
+        # wrappers over the same program with different knobs must never
+        # share a compiled executor.
         return (
             self.backend,
             z,
@@ -742,6 +832,9 @@ class AutobatchedFunction:
             self.fuse,
             self.verify,
             self.dce,
+            self.on_fault,
+            self.detect_nonfinite,
+            self.lane_step_budget,
             self._mesh_key(),
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
@@ -956,6 +1049,9 @@ def autobatch(
     mesh: Any = None,
     verify: bool = False,
     dce: bool = True,
+    on_fault: str = "raise",
+    detect_nonfinite: bool = False,
+    lane_step_budget: Optional[int] = None,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -1009,6 +1105,22 @@ def autobatch(
       programs have no static bound and fall back to
       ``DEFAULT_MAX_DEPTH=32`` — pass an explicit ``max_depth=`` there
       (a stack overflow names the recursive cycle).
+
+    Fault containment knobs (pc backend; also part of the cache key):
+
+    * ``on_fault="raise"`` (the default) keeps faults batch-fatal: the
+      executor raises :class:`pc_vm.StackOverflow` (with the per-lane mask
+      and lane indices as attributes) or :class:`pc_vm.LaneFault` after
+      the run.  ``on_fault="quarantine"`` contains faults per lane: a
+      faulted lane is parked out of the liveness mask, the batch never
+      aborts, healthy lanes stay bit-exact with a fault-free run, and the
+      per-lane verdicts are exposed via ``fn.last_result.fault_code`` /
+      ``Stepper.fault_code`` (codes index ``pc_vm.FAULT_NAMES``);
+    * ``detect_nonfinite=True`` checks every masked state write of inexact
+      dtype for NaN/Inf and faults the writing lane (``NONFINITE``);
+    * ``lane_step_budget=N`` arms a per-lane watchdog: a lane active for
+      more than ``N`` block dispatches without halting faults
+      (``WATCHDOG``) — the guard against data-dependent livelock.
     """
     if target is None:
         return functools.partial(
@@ -1026,6 +1138,9 @@ def autobatch(
             mesh=mesh,
             verify=verify,
             dce=dce,
+            on_fault=on_fault,
+            detect_nonfinite=detect_nonfinite,
+            lane_step_budget=lane_step_budget,
             registry=registry,
         )
     if registry is not None:
@@ -1046,6 +1161,8 @@ def autobatch(
         backend=backend, batch_size=batch_size, max_depth=max_depth,
         max_steps=max_steps, use_kernel=use_kernel, collect_stats=collect_stats,
         schedule=schedule, fuse=fuse, mesh=mesh, verify=verify, dce=dce,
+        on_fault=on_fault, detect_nonfinite=detect_nonfinite,
+        lane_step_budget=lane_step_budget,
     )
 
     program: Optional[ir.Program] = None

@@ -74,6 +74,25 @@ retire-and-refill continuous batching (see ``repro/serve/engine.py``).
 Snapshots are donatable pytrees: on accelerator backends every
 state-in/state-out entry point donates its input snapshot, so steady-state
 memory stays flat at one copy of the VM state.
+
+Fault containment (``VMConfig.on_fault``):
+
+Batch members run independently, so one misbehaving lane should not be
+batch-fatal.  Every lane carries a fault code (``FAULT_OK`` /
+``FAULT_STACK_OVERFLOW`` / ``FAULT_NONFINITE`` / ``FAULT_WATCHDOG``;
+first fault wins) set when a push overflows ``max_depth``, when a masked
+state write produces NaN/Inf (opt-in via ``detect_nonfinite``), or when a
+lane stays active past ``lane_step_budget`` dispatches without halting
+(opt-in watchdog against data-dependent livelock).  Under
+``on_fault="quarantine"`` a faulted lane is excluded from every dispatch
+mask and from the liveness reduction the iteration after it faults — its
+state freezes, the batch keeps running, and healthy lanes stay bit-exact
+with a fault-free run (masking already guarantees per-lane independence).
+Under ``on_fault="raise"`` (the default) behavior is the historical
+batch-fatal one: the executor raises :class:`StackOverflow` /
+:class:`LaneFault` after the run, and an enabled detector halts the loop
+early instead of spinning to ``max_steps``.  ``inject`` clears the fault
+code and watchdog clock of refilled lanes.
 """
 from __future__ import annotations
 
@@ -115,6 +134,20 @@ def _gather_top(stack: Array, ptr: Array) -> Array:
 
 
 SCHEDULES = ("earliest", "popular", "sweep")
+
+#: Fault policies (``VMConfig.on_fault``): ``"raise"`` keeps the historical
+#: batch-fatal behavior (the executor raises after the run); ``"quarantine"``
+#: parks faulted lanes out of the liveness mask so the batch never aborts.
+ON_FAULT = ("raise", "quarantine")
+
+# Per-lane fault codes (i32, first fault wins; 0 = healthy).
+FAULT_OK = 0
+FAULT_STACK_OVERFLOW = 1  # a push landed at or beyond max_depth
+FAULT_NONFINITE = 2  # a masked state write produced NaN/Inf (opt-in)
+FAULT_WATCHDOG = 3  # lane exceeded its per-lane step budget (opt-in)
+
+#: Human-readable names, indexed by fault code.
+FAULT_NAMES = ("ok", "stack_overflow", "nonfinite", "watchdog")
 
 #: Mesh axis name the lane (batch) dimension shards over.
 LANE_AXIS = "lanes"
@@ -168,7 +201,45 @@ class StackOverflow(RuntimeError):
     Out-of-range pushes are dropped (``mode="drop"``), so overflowing
     members produce invalid results while other members stay exact; the
     per-member ``VMResult.depth_exceeded`` flag records who overflowed.
+
+    When raised by the batching executors, the exception carries the
+    per-lane evidence as attributes: ``depth_exceeded`` is the ``[batch]``
+    bool overflow mask (host ``numpy``), and ``lanes`` is the sorted array
+    of offending lane indices — so callers can report *which* requests
+    died instead of just that something did.
     """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        depth_exceeded: Optional[np.ndarray] = None,
+        lanes: Optional[np.ndarray] = None,
+    ):
+        super().__init__(message)
+        self.depth_exceeded = depth_exceeded
+        if lanes is None and depth_exceeded is not None:
+            lanes = np.flatnonzero(np.asarray(depth_exceeded))
+        self.lanes = lanes
+
+
+class LaneFault(RuntimeError):
+    """One or more lanes faulted (non-finite write or watchdog) under
+    ``on_fault="raise"``.
+
+    Attributes: ``fault_codes`` — the ``[batch]`` i32 code array (host
+    ``numpy``, see :data:`FAULT_NAMES`); ``lanes`` — indices of the faulted
+    lanes; ``faults`` — ``{lane: name}`` for the same lanes.
+    """
+
+    def __init__(self, message: str, *, fault_codes: np.ndarray):
+        super().__init__(message)
+        codes = np.asarray(fault_codes)
+        self.fault_codes = codes
+        self.lanes = np.flatnonzero(codes != FAULT_OK)
+        self.faults = {
+            int(i): FAULT_NAMES[int(codes[i])] for i in self.lanes
+        }
 
 
 @dataclass(frozen=True)
@@ -186,6 +257,31 @@ class VMConfig:
     # compiling it — catches a broken transform before it becomes a wrong
     # batched answer.
     verify: bool = False
+    # Fault containment.  "raise": faults are batch-fatal — the executor
+    # raises StackOverflow/LaneFault after the run (historical behavior).
+    # "quarantine": faulted lanes are excluded from the liveness mask and
+    # from every block's dispatch mask the iteration after they fault, so
+    # the batch keeps running and healthy lanes stay bit-exact with a
+    # fault-free run.
+    on_fault: str = "raise"
+    # Opt-in finiteness check on masked state writes (inexact dtypes only):
+    # a lane that writes NaN/Inf into VM state gets FAULT_NONFINITE.
+    detect_nonfinite: bool = False
+    # Opt-in watchdog against data-dependent livelock: a lane that stays
+    # active for more than this many block dispatches without halting gets
+    # FAULT_WATCHDOG.  None disables the check.
+    lane_step_budget: Optional[int] = None
+
+    def __post_init__(self):
+        if self.on_fault not in ON_FAULT:
+            raise ValueError(
+                f"on_fault must be one of {ON_FAULT}, got {self.on_fault!r}"
+            )
+        if self.lane_step_budget is not None and self.lane_step_budget < 1:
+            raise ValueError(
+                "lane_step_budget must be >= 1 (or None to disable), got "
+                f"{self.lane_step_budget}"
+            )
 
 
 @dataclass(frozen=True)
@@ -219,6 +315,15 @@ class VMResult:
     tag_stats: dict[str, tuple[int, int]]  # tag -> (execs, active) post-run
     depth_exceeded: Optional[Array] = None  # [batch] bool: stack overflowed
     sched: Optional[SchedulerStats] = None
+    fault_code: Optional[Array] = None  # [batch] i32, see FAULT_NAMES
+    lane_steps: Optional[Array] = None  # [batch] i32 active-dispatch counts
+
+    @property
+    def fault_mask(self) -> Optional[Array]:
+        """[batch] bool: lanes that faulted (None on legacy snapshots)."""
+        if self.fault_code is None:
+            return None
+        return self.fault_code != FAULT_OK
 
 
 class ProgramCounterVM:
@@ -230,6 +335,7 @@ class ProgramCounterVM:
                 f"schedule must be one of {SCHEDULES}, "
                 f"got {config.schedule!r}"
             )
+        # on_fault / lane_step_budget are validated by VMConfig itself.
         if config.verify:
             from . import verifier
 
@@ -332,6 +438,11 @@ class ProgramCounterVM:
             # beyond max_depth (the scatter drops it, invalidating that
             # member's results).
             "depth_exceeded": jnp.zeros((z,), jnp.bool_),
+            # Per-lane fault code (FAULT_*); first fault wins, inject clears.
+            "fault_code": jnp.zeros((z,), _I32),
+            # Per-lane count of block dispatches the lane was active in —
+            # the watchdog's clock, and cheap per-lane progress telemetry.
+            "lane_steps": jnp.zeros((z,), _I32),
         }
         if self.config.collect_block_stats:
             state["block_exec"] = jnp.zeros((self.num_blocks,), _I32)
@@ -358,6 +469,8 @@ class ProgramCounterVM:
         out["pc_stack"] = wsc(state["pc_stack"], stack)
         out["pc_ptr"] = wsc(state["pc_ptr"], lane)
         out["depth_exceeded"] = wsc(state["depth_exceeded"], lane)
+        out["fault_code"] = wsc(state["fault_code"], lane)
+        out["lane_steps"] = wsc(state["lane_steps"], lane)
         out["tops"] = {v: wsc(x, lane) for v, x in state["tops"].items()}
         out["stacks"] = {v: wsc(x, stack) for v, x in state["stacks"].items()}
         out["ptrs"] = {v: wsc(x, lane) for v, x in state["ptrs"].items()}
@@ -376,18 +489,45 @@ class ProgramCounterVM:
         temp_vars = lowered.temp_vars
         use_kernel = self.config.use_kernel
         max_depth = self.config.max_depth
+        quarantine = self.config.on_fault == "quarantine"
+        detect_nonfinite = self.config.detect_nonfinite
+        budget = self.config.lane_step_budget
+        exit_idx = lowered.exit_index
 
         if use_kernel:
             from repro.kernels.stack_ops import ops as _sk
 
         def run(state: dict[str, Any]) -> dict[str, Any]:
             mask = state["pc_top"] == bidx
+            fault_code = state["fault_code"]
+            if quarantine:
+                # Quarantined lanes never dispatch again: every masked
+                # update below sees them as inactive, freezing their state.
+                mask = jnp.logical_and(mask, fault_code == FAULT_OK)
             imask = mask.astype(_I32)
             tops = dict(state["tops"])
             stacks = dict(state["stacks"])
             ptrs = dict(state["ptrs"])
             depth_exceeded = state["depth_exceeded"]
             temps: dict[str, Array] = {}
+
+            def set_fault(where: Array, code: int) -> None:
+                # First fault wins: only OK lanes take a new code.
+                nonlocal fault_code
+                fault_code = jnp.where(
+                    jnp.logical_and(where, fault_code == FAULT_OK),
+                    jnp.asarray(code, _I32),
+                    fault_code,
+                )
+
+            def check_finite(val: Array) -> None:
+                # Opt-in NONFINITE detection on values entering VM state.
+                if not jnp.issubdtype(val.dtype, jnp.inexact):
+                    return
+                bad = jnp.logical_not(jnp.isfinite(val))
+                if val.ndim > 1:
+                    bad = jnp.any(bad, axis=tuple(range(1, val.ndim)))
+                set_fault(jnp.logical_and(mask, bad), FAULT_NONFINITE)
 
             def read(v: str) -> Array:
                 return temps[v] if v in temp_vars else tops[v]
@@ -396,6 +536,8 @@ class ProgramCounterVM:
                 if v in temp_vars:
                     temps[v] = val
                 else:
+                    if detect_nonfinite:
+                        check_finite(val)
                     tops[v] = _masked(mask, val.astype(tops[v].dtype), tops[v])
 
             for op in blk.ops:
@@ -420,10 +562,11 @@ class ProgramCounterVM:
                         write(name, val)
                 elif isinstance(op, ir.LPush):
                     old_top = tops[op.var]
-                    depth_exceeded = jnp.logical_or(
-                        depth_exceeded,
-                        jnp.logical_and(mask, ptrs[op.var] >= max_depth),
+                    overflow = jnp.logical_and(
+                        mask, ptrs[op.var] >= max_depth
                     )
+                    depth_exceeded = jnp.logical_or(depth_exceeded, overflow)
+                    set_fault(overflow, FAULT_STACK_OVERFLOW)
                     if use_kernel:
                         stacks[op.var] = _sk.masked_push(
                             stacks[op.var], ptrs[op.var], old_top, mask
@@ -433,7 +576,10 @@ class ProgramCounterVM:
                             stacks[op.var], ptrs[op.var], old_top, mask
                         )
                     ptrs[op.var] = ptrs[op.var] + imask
-                    tops[op.var] = _masked(mask, read(op.src), old_top)
+                    new_top = read(op.src)
+                    if detect_nonfinite:
+                        check_finite(new_top)
+                    tops[op.var] = _masked(mask, new_top, old_top)
                 elif isinstance(op, ir.LPop):
                     new_ptr = ptrs[op.var] - imask
                     if use_kernel:
@@ -459,9 +605,9 @@ class ProgramCounterVM:
             elif isinstance(t, ir.LPushJump):
                 # Bury the return address; jump to the callee entry.
                 ret = jnp.full_like(pc_top, t.ret)
-                depth_exceeded = jnp.logical_or(
-                    depth_exceeded, jnp.logical_and(mask, pc_ptr >= max_depth)
-                )
+                pc_overflow = jnp.logical_and(mask, pc_ptr >= max_depth)
+                depth_exceeded = jnp.logical_or(depth_exceeded, pc_overflow)
+                set_fault(pc_overflow, FAULT_STACK_OVERFLOW)
                 pc_stack = _scatter_push(pc_stack, pc_ptr, ret, mask)
                 pc_ptr = pc_ptr + imask
                 pc_top = jnp.where(mask, t.target, pc_top)
@@ -473,6 +619,18 @@ class ProgramCounterVM:
             else:  # pragma: no cover
                 raise AssertionError(t)
 
+            # Watchdog: lanes pay one tick per dispatch they were active
+            # in; a lane that burns its budget without halting is faulted.
+            lane_steps = state["lane_steps"] + imask
+            if budget is not None:
+                set_fault(
+                    jnp.logical_and(
+                        jnp.logical_and(mask, lane_steps >= budget),
+                        pc_top < exit_idx,
+                    ),
+                    FAULT_WATCHDOG,
+                )
+
             out = dict(state)
             out.update(
                 pc_top=pc_top,
@@ -482,6 +640,8 @@ class ProgramCounterVM:
                 stacks=stacks,
                 ptrs=ptrs,
                 depth_exceeded=depth_exceeded,
+                fault_code=fault_code,
+                lane_steps=lane_steps,
             )
             return out
 
@@ -501,7 +661,7 @@ class ProgramCounterVM:
         """
         exit_idx = self.lowered.exit_index
         pc_top = state["pc_top"]
-        live = pc_top < exit_idx
+        live = self._live_mask(state)
         if self.config.schedule == "popular":
             # Occupancy argmax: the block where most live members reside.
             # The [num_blocks] histogram is replicated; the scatter-add over
@@ -523,23 +683,54 @@ class ProgramCounterVM:
     def _run(self, inputs: dict[str, Array]) -> dict[str, Any]:
         return self._loop(self._start(inputs))
 
+    def _live_mask(self, state: dict[str, Any]) -> Array:
+        """[batch] bool: lanes that still dispatch.  Under quarantine a
+        faulted lane is no longer live, whatever its pc says."""
+        live = state["pc_top"] < self.lowered.exit_index
+        if self.config.on_fault == "quarantine":
+            live = jnp.logical_and(live, state["fault_code"] == FAULT_OK)
+        return live
+
     def _liveness_cond(self, state: dict[str, Any]) -> Array:
         # Global liveness: ``any`` over the lane axis — a single bool
         # all-reduce per iteration under a mesh.
-        return jnp.logical_and(
+        cond = jnp.logical_and(
             state["steps"] < self.config.max_steps,
-            jnp.any(state["pc_top"] < self.lowered.exit_index),
+            jnp.any(self._live_mask(state)),
         )
+        if self.config.on_fault == "raise" and (
+            self.config.detect_nonfinite
+            or self.config.lane_step_budget is not None
+        ):
+            # Fail fast: a NONFINITE/WATCHDOG fault is batch-fatal under
+            # "raise", so stop the loop instead of spinning to max_steps
+            # (a livelocked lane would otherwise never let cond go false).
+            cond = jnp.logical_and(
+                cond,
+                jnp.logical_not(
+                    jnp.any(state["fault_code"] >= FAULT_NONFINITE)
+                ),
+            )
+        return cond
 
     def _make_body(self) -> Callable:
         """The loop body for this config's schedule (shared by the
         single-shot and segmented loops, so the two are bit-exact)."""
         collect = self.config.collect_block_stats
+        quarantine = self.config.on_fault == "quarantine"
+
+        def resident(state, b):
+            # The same mask the block body dispatches under — quarantined
+            # lanes don't count toward occupancy.
+            m = state["pc_top"] == b
+            if quarantine:
+                m = jnp.logical_and(m, state["fault_code"] == FAULT_OK)
+            return m
 
         def body_switch(state):
             i = self._pick_block(state)
             if collect:
-                active = jnp.sum((state["pc_top"] == i).astype(_I32))
+                active = jnp.sum(resident(state, i).astype(_I32))
                 state = dict(state)
                 state["block_exec"] = state["block_exec"].at[i].add(1)
                 state["block_active"] = state["block_active"].at[i].add(active)
@@ -554,7 +745,7 @@ class ProgramCounterVM:
             # several (forward) blocks within one sweep.
             for b, fn in enumerate(self._block_fns):
                 if collect:
-                    active = jnp.sum((state["pc_top"] == b).astype(_I32))
+                    active = jnp.sum(resident(state, b).astype(_I32))
                     state = dict(state)
                     # Count a dispatch only when it had resident members,
                     # so utilization stays comparable across schedules.
@@ -641,6 +832,14 @@ class ProgramCounterVM:
         """Per-lane halt flags: ``[batch]`` bool, True once a lane exited."""
         return state["pc_top"] >= self.lowered.exit_index
 
+    def lane_fault(self, state: dict[str, Any]) -> Array:
+        """Per-lane fault codes: ``[batch]`` i32 (see :data:`FAULT_NAMES`)."""
+        return state["fault_code"]
+
+    def lane_faulted(self, state: dict[str, Any]) -> Array:
+        """Per-lane fault flags: ``[batch]`` bool, True once a lane faulted."""
+        return state["fault_code"] != FAULT_OK
+
     def park(self, state: dict[str, Any], mask: Array) -> dict[str, Any]:
         """Force masked lanes to the exit block (idle, excluded from
         liveness).  Used to hold lanes that have no work assigned yet."""
@@ -704,6 +903,10 @@ class ProgramCounterVM:
         out["depth_exceeded"] = jnp.logical_and(
             state["depth_exceeded"], jnp.logical_not(mask)
         )
+        # A refilled lane starts healthy: fault code and watchdog clock
+        # reset with the rest of its state.
+        out["fault_code"] = jnp.where(mask, FAULT_OK, state["fault_code"])
+        out["lane_steps"] = jnp.where(mask, 0, state["lane_steps"])
         tops = dict(state["tops"])
         for v in self._state_vars:
             tops[v] = _masked(mask, jnp.zeros_like(tops[v]), tops[v])
@@ -729,7 +932,12 @@ class ProgramCounterVM:
     def _result(self, state) -> VMResult:
         lp = self.lowered
         outputs = {o: state["tops"][o] for o in lp.main_outputs}
-        converged = jnp.all(state["pc_top"] >= lp.exit_index)
+        done = state["pc_top"] >= lp.exit_index
+        if self.config.on_fault == "quarantine":
+            # A quarantined lane will never reach the exit block; the run
+            # still converged if every lane either halted or faulted.
+            done = jnp.logical_or(done, state["fault_code"] != FAULT_OK)
+        converged = jnp.all(done)
         block_exec = state.get("block_exec")
         block_active = state.get("block_active")
         tag_stats: dict[str, tuple[int, int]] = {}
@@ -766,6 +974,8 @@ class ProgramCounterVM:
             tag_stats=tag_stats,
             depth_exceeded=state.get("depth_exceeded"),
             sched=sched,
+            fault_code=state.get("fault_code"),
+            lane_steps=state.get("lane_steps"),
         )
 
     # ------------------------------------------------------------------

@@ -51,9 +51,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batching, frontend, ir
+from repro.core import batching, frontend, ir, pc_vm
 from repro.core.frontend import spec
 from repro.models.transformer import Model
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import StragglerPolicy
 
 KEY = spec((2,), jnp.uint32)
 I32 = spec((), jnp.int32)
@@ -80,6 +82,37 @@ class EngineConfig:
     # admission/retire checks.  Smaller = lower admission latency, more
     # host round-trips; larger = the opposite.
     segment_steps: int = 64
+    # ---- fault containment & resilience (serve/generate) ----
+    # VM fault policy (see pc_vm.VMConfig.on_fault).  The serving default
+    # is "quarantine": one faulted request must never take down the other
+    # lanes' dispatch loop.
+    on_fault: str = "quarantine"
+    # Fault the writing lane on any NaN/Inf entering VM state (e.g. a
+    # poisoned KV cache); opt-in, costs an isfinite reduce per write.
+    detect_nonfinite: bool = False
+    # Per-lane watchdog: fault a lane active for more than this many VM
+    # dispatches without finishing its request (livelock guard).  None
+    # disables.
+    lane_step_budget: Optional[int] = None
+    # Per-request deadline, arrival -> finish, checked between segments
+    # (granularity = one segment).  A retry's window restarts at its
+    # re-enqueue time.  None disables.
+    deadline_s: Optional[float] = None
+    # Bounded admission queue: max requests arrived-but-not-admitted.  An
+    # arrival past the bound is shed with Completion.status="rejected"
+    # (explicit backpressure).  None = unbounded.
+    queue_capacity: Optional[int] = None
+    # Faulted/timed-out requests are re-enqueued with exponential backoff
+    # (retry_backoff_s * 2**(attempt-1)) until max_attempts, then resolved
+    # terminally as "faulted"/"timeout".
+    max_attempts: int = 1
+    retry_backoff_s: float = 0.05
+    # Host-loop crash-resume: snapshot the live VM segment state (plus the
+    # host bookkeeping) through train.Checkpointer every
+    # checkpoint_every_segments segments.  serve(resume=True) restores the
+    # newest valid snapshot and continues.  None disables.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_segments: int = 8
 
 
 def _cache_layout(model: Model, window: int):
@@ -116,16 +149,33 @@ class Request:
     arrival: float = 0.0  # seconds since serve() start
 
 
+#: Terminal request outcomes (Completion.status).
+COMPLETION_STATUSES = ("ok", "faulted", "timeout", "rejected")
+
+
 @dataclass(frozen=True)
 class Completion:
-    """A finished request, streamed out of :meth:`GenerationEngine.serve`."""
+    """A terminally-resolved request from :meth:`GenerationEngine.serve`.
+
+    Every request resolves to exactly one completion; ``status`` says how:
+
+    * ``"ok"`` — finished normally; ``tokens`` holds the generation.
+    * ``"faulted"`` — the lane faulted (``fault`` names the kind: one of
+      ``pc_vm.FAULT_NAMES``) and retries were exhausted; tokens are empty.
+    * ``"timeout"`` — the deadline passed (queued or in flight) and
+      retries were exhausted; tokens are empty.
+    * ``"rejected"`` — shed at admission: the bounded queue was full.
+    """
 
     rid: int
-    tokens: np.ndarray  # [length] int32
-    lane: int
+    tokens: np.ndarray  # [length] int32 (empty unless status == "ok")
+    lane: int  # -1 if never admitted to a lane
     arrival: float  # request arrival time
     admitted: float  # when the request was injected into a lane
-    finished: float  # when the lane was observed retired
+    finished: float  # when the terminal outcome was observed
+    status: str = "ok"
+    attempts: int = 1  # admission attempts consumed (>= 1)
+    fault: Optional[str] = None  # fault kind for status == "faulted"
 
     @property
     def latency(self) -> float:
@@ -139,11 +189,19 @@ class ServeStats:
 
     segments: int = 0
     vm_steps: int = 0
-    completions: int = 0
+    completions: int = 0  # terminal completions, every status
     generated_tokens: int = 0
     wall_time: float = 0.0
     # Mean fraction of lanes busy per segment (occupancy under refill).
     occupancy: float = 0.0
+    # Terminal outcomes by status + resilience counters.
+    ok: int = 0
+    faulted: int = 0
+    timeout: int = 0
+    rejected: int = 0
+    retries: int = 0  # re-enqueues (not counted in the terminal counters)
+    straggler_events: int = 0  # segments flagged by StragglerPolicy
+    checkpoints: int = 0  # crash-resume snapshots written
     _occ_acc: float = field(default=0.0, repr=False)
 
 
@@ -158,6 +216,15 @@ class GenerationEngine:
         self.program = self._build_program()
         # The engine program is loop-only, so its inputs are all per-lane
         # (Batched) by default; outputs restructure into a result pytree.
+        fault_opts = (
+            dict(
+                on_fault=cfg.on_fault,
+                detect_nonfinite=cfg.detect_nonfinite,
+                lane_step_budget=cfg.lane_step_budget,
+            )
+            if cfg.backend == "pc"
+            else {}
+        )
         self.batched = batching.autobatch(
             self.program,
             out_spec={"tokens": "out", "lengths": "olens"},
@@ -166,6 +233,7 @@ class GenerationEngine:
             max_depth=4,
             max_steps=2_000_000,
             mesh=cfg.mesh,
+            **fault_opts,
         )
 
     # ------------------------------------------------------------------
@@ -401,6 +469,9 @@ class GenerationEngine:
                 max_depth=4,
                 max_steps=2 ** 31 - 2,  # a server's step count is unbounded
                 mesh=self.cfg.mesh,
+                on_fault=self.cfg.on_fault,
+                detect_nonfinite=self.cfg.detect_nonfinite,
+                lane_step_budget=self.cfg.lane_step_budget,
             )
         return self._serve_batched
 
@@ -412,24 +483,50 @@ class GenerationEngine:
         seed: int = 0,
         now_fn: Optional[Callable[[], float]] = None,
         on_finish: Optional[Callable[[Completion], None]] = None,
+        resume: bool = False,
+        straggler: Optional[StragglerPolicy] = None,
     ) -> tuple[list[Completion], ServeStats]:
         """Serve an open-loop request stream with live refill.
 
         Runs the single-request program in VM segments of
         ``segment_steps`` dispatches.  Between segments the host:
 
-        1. **retires** — reads per-lane halt flags, streams each finished
-           lane's tokens out as a :class:`Completion` (via ``on_finish``
-           the moment it is observed), and returns the lane to the free
-           pool;
-        2. **admits** — pops requests whose ``arrival`` time has passed
-           off the queue and injects them into free lanes with a masked
-           in-place re-initialization (in-flight lanes are untouched).
+        1. **retires** — reads per-lane halt flags and fault codes,
+           streams each finished lane's tokens out as a
+           :class:`Completion` (via ``on_finish`` the moment it is
+           observed), and returns the lane to the free pool.  A *faulted*
+           lane (quarantined NaN / watchdog / overflow) is retired too:
+           its request is re-enqueued with exponential backoff while
+           attempts remain (``cfg.max_attempts``), else resolved
+           terminally with ``status="faulted"``;
+        2. **enforces deadlines** — a request whose ``cfg.deadline_s``
+           window (arrival -> finish; a retry's window restarts at its
+           re-enqueue) has passed is timed out, whether queued or in
+           flight (in-flight lanes are parked and freed), and retried or
+           resolved as ``status="timeout"``;
+        3. **admits** — pops requests whose ``arrival`` time has passed
+           off the queue into free lanes with a masked in-place
+           re-initialization (in-flight lanes are untouched).  With
+           ``cfg.queue_capacity`` set, an arrival that finds the waiting
+           queue full is shed immediately as ``status="rejected"``
+           (explicit backpressure).
+
+        With ``cfg.checkpoint_dir`` set, the live VM segment state plus
+        the host bookkeeping (done rids, in-flight lane assignments) is
+        snapshotted through :class:`train.Checkpointer` every
+        ``cfg.checkpoint_every_segments`` segments; after a host crash,
+        ``serve(requests, resume=True)`` restores the newest valid
+        snapshot, skips already-completed requests, and continues the
+        in-flight ones from mid-generation.  Delivery is at-least-once: a
+        request that finished after the last snapshot is re-served.
 
         ``now_fn`` supplies the clock (seconds since serve start);
         defaults to wall time, pass ``lambda: 0.0``-style closures for
         deterministic tests.  Completions are returned sorted by request
-        id; per-request latency (arrival -> finish) is on each completion.
+        id; every request resolves to exactly one terminal
+        :class:`Completion` (``ok|faulted|timeout|rejected``).
+        Per-segment latencies feed a :class:`StragglerPolicy`
+        (``stats.straggler_events``).
         """
         cfg = self.cfg
         z = cfg.lanes
@@ -437,13 +534,18 @@ class GenerationEngine:
                else int(segment_steps))
         if seg < 1:
             raise ValueError(f"segment_steps must be >= 1, got {seg}")
-        pend = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        for r in pend:
+        if cfg.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {cfg.max_attempts}"
+            )
+        for r in requests:
             if len(r.prompt) > cfg.max_prompt_len:
                 raise ValueError(
                     f"request {r.rid}: prompt length {len(r.prompt)} "
                     f"exceeds max_prompt_len={cfg.max_prompt_len}"
                 )
+        if resume and cfg.checkpoint_dir is None:
+            raise ValueError("serve(resume=True) needs cfg.checkpoint_dir")
 
         st = self.serve_batched.stepper(
             jnp.zeros((z, cfg.max_prompt_len), jnp.int32),
@@ -457,10 +559,77 @@ class GenerationEngine:
         now = now_fn if now_fn is not None else (
             lambda: time.perf_counter() - t0
         )
-        free = list(range(z))[::-1]  # pop() from lane 0 up
-        active: dict[int, tuple[Request, float]] = {}
+        pol = straggler if straggler is not None else StragglerPolicy()
         completions: list[Completion] = []
         stats = ServeStats()
+        done_rids: set[int] = set()
+        # Queue entries: one admission attempt of one request.
+        # {"req", "attempt", "not_before", "anchor", "deadline_at",
+        #  "admitted"} — "anchor" is the attempt's deadline start (the
+        # request arrival, or the re-enqueue time for retries).
+        active: dict[int, dict] = {}
+
+        def _entry(r: Request, attempt: int = 1,
+                   not_before: Optional[float] = None) -> dict:
+            anchor = r.arrival if not_before is None else not_before
+            return {
+                "req": r, "attempt": attempt,
+                "not_before": anchor, "anchor": anchor,
+                "deadline_at": (
+                    anchor + cfg.deadline_s
+                    if cfg.deadline_s is not None else None
+                ),
+                "admitted": None,
+            }
+
+        # ---- crash-resume restore --------------------------------------
+        ckpt = (Checkpointer(cfg.checkpoint_dir, async_save=False)
+                if cfg.checkpoint_dir else None)
+        ckpt_step = 0
+        if resume and ckpt is not None:
+            latest = ckpt.latest_step()
+            if latest is not None:
+                ckpt_step = latest
+                state = ckpt.restore(latest, like=state)
+                # Re-pin the lane layout under a mesh (park with an empty
+                # mask is a sharded identity).
+                state = st.park(state, np.zeros((z,), bool))
+                meta = ckpt.manifest(latest).get("extra", {})
+                done_rids = set(meta.get("done_rids", []))
+                by_rid = {r.rid: r for r in requests}
+                for lane_s, info in meta.get("active", {}).items():
+                    rid = int(info["rid"])
+                    r = by_rid.get(rid)
+                    if r is None:
+                        # The caller did not re-pass this in-flight rid;
+                        # serve it from the snapshot anyway (tokens come
+                        # from the VM) under a synthetic request record.
+                        r = Request(
+                            rid=rid,
+                            prompt=np.zeros((0,), np.int32),
+                            arrival=0.0,
+                        )
+                    e = _entry(r, attempt=int(info.get("attempt", 1)))
+                    # The clock restarted with the host: the resumed
+                    # attempt's deadline window restarts at resume time.
+                    e["anchor"] = 0.0
+                    e["deadline_at"] = (
+                        cfg.deadline_s if cfg.deadline_s is not None
+                        else None
+                    )
+                    e["admitted"] = 0.0
+                    active[int(lane_s)] = e
+
+        pend = sorted(
+            (
+                _entry(r) for r in requests
+                if r.rid not in done_rids
+                and all(e["req"].rid != r.rid for e in active.values())
+            ),
+            key=lambda e: (e["not_before"], e["req"].rid),
+        )
+        waiting: list[dict] = []
+        free = [lane for lane in range(z) if lane not in active][::-1]
 
         prompts_buf = np.zeros((z, cfg.max_prompt_len), np.int32)
         plens_buf = np.zeros((z,), np.int32)
@@ -468,22 +637,96 @@ class GenerationEngine:
         idle_spins = 0
         max_steps_budget = st.vm.config.max_steps
 
-        while pend or active:
-            # ---- admit: arrived requests -> free lanes (masked inject) --
-            mask = np.zeros((z,), bool)
-            t_now = now()
-            while pend and free and pend[0].arrival <= t_now:
-                r = pend.pop(0)
-                lane = free.pop()
-                p = np.asarray(r.prompt, np.int32).reshape(-1)
-                prompts_buf[lane] = 0
-                prompts_buf[lane, : len(p)] = p
-                plens_buf[lane] = len(p)
-                keys_buf[lane] = np.asarray(
-                    jax.random.PRNGKey(seed + r.rid), np.uint32
+        def _terminal(e: dict, status: str, lane: int, t_now: float,
+                      tokens: Optional[np.ndarray] = None,
+                      fault: Optional[str] = None) -> None:
+            r = e["req"]
+            comp = Completion(
+                rid=r.rid,
+                tokens=(tokens if tokens is not None
+                        else np.zeros((0,), np.int32)),
+                lane=lane,
+                arrival=r.arrival,
+                admitted=(e["admitted"] if e["admitted"] is not None
+                          else t_now),
+                finished=t_now,
+                status=status,
+                attempts=e["attempt"],
+                fault=fault,
+            )
+            completions.append(comp)
+            done_rids.add(r.rid)
+            setattr(stats, status, getattr(stats, status) + 1)
+            if on_finish is not None:
+                on_finish(comp)
+
+        def _retry_or_terminal(e: dict, status: str, lane: int,
+                               t_now: float,
+                               fault: Optional[str] = None) -> None:
+            if e["attempt"] < cfg.max_attempts:
+                stats.retries += 1
+                delay = cfg.retry_backoff_s * (2 ** (e["attempt"] - 1))
+                pend.append(
+                    _entry(e["req"], attempt=e["attempt"] + 1,
+                           not_before=t_now + delay)
                 )
-                mask[lane] = True
-                active[lane] = (r, t_now)
+                pend.sort(key=lambda x: (x["not_before"], x["req"].rid))
+            else:
+                _terminal(e, status, lane, t_now, fault=fault)
+
+        def _admit(e: dict, lane: int, mask: np.ndarray,
+                   t_now: float) -> None:
+            r = e["req"]
+            p = np.asarray(r.prompt, np.int32).reshape(-1)
+            prompts_buf[lane] = 0
+            prompts_buf[lane, : len(p)] = p
+            plens_buf[lane] = len(p)
+            keys_buf[lane] = np.asarray(
+                jax.random.PRNGKey(seed + r.rid), np.uint32
+            )
+            mask[lane] = True
+            e["admitted"] = t_now
+            active[lane] = e
+
+        def _save_checkpoint() -> None:
+            nonlocal ckpt_step
+            ckpt_step += 1
+            ckpt.save(
+                ckpt_step, state,
+                extra={
+                    "done_rids": sorted(done_rids),
+                    "active": {
+                        str(lane): {
+                            "rid": e["req"].rid, "attempt": e["attempt"]
+                        }
+                        for lane, e in active.items()
+                    },
+                },
+            )
+            stats.checkpoints += 1
+
+        while pend or waiting or active:
+            t_now = now()
+            # ---- admit: arrivals -> lanes, else bounded queue ----------
+            mask = np.zeros((z,), bool)
+            while pend and pend[0]["not_before"] <= t_now:
+                e = pend.pop(0)
+                if free and not waiting:  # FIFO: queued requests go first
+                    _admit(e, free.pop(), mask, t_now)
+                elif (cfg.queue_capacity is None
+                      or len(waiting) < cfg.queue_capacity):
+                    waiting.append(e)
+                else:
+                    _terminal(e, "rejected", -1, t_now)
+            # Queued requests whose deadline passed while waiting.
+            if cfg.deadline_s is not None:
+                for e in [w for w in waiting
+                          if w["deadline_at"] is not None
+                          and t_now >= w["deadline_at"]]:
+                    waiting.remove(e)
+                    _retry_or_terminal(e, "timeout", -1, t_now)
+            while waiting and free:
+                _admit(waiting.pop(0), free.pop(), mask, t_now)
             if mask.any():
                 state = st.inject(
                     state, mask,
@@ -494,20 +737,23 @@ class GenerationEngine:
                 # Every lane idle and the next arrival is in the future:
                 # yield the host briefly instead of spinning.
                 if pend and now_fn is None:
-                    time.sleep(min(max(pend[0].arrival - now(), 0.0), 0.01))
+                    time.sleep(
+                        min(max(pend[0]["not_before"] - now(), 0.0), 0.01)
+                    )
                 elif pend:
                     idle_spins += 1
                     if idle_spins > 1_000_000:
                         raise RuntimeError(
                             "serve(): all lanes idle but the now_fn clock "
                             f"never reaches the next arrival "
-                            f"({pend[0].arrival}); supply an advancing "
-                            "clock"
+                            f"({pend[0]['not_before']}); supply an "
+                            "advancing clock"
                         )
                 continue
             idle_spins = 0
 
             # ---- one VM segment -------------------------------------
+            t_seg = time.perf_counter()
             state = st.step(state, seg)
             stats.segments += 1
             stats._occ_acc += len(active) / z
@@ -522,36 +768,67 @@ class GenerationEngine:
                     "program's max_steps"
                 )
 
-            # ---- retire: stream finished lanes, free them -----------
+            # ---- retire: finished / faulted / timed-out lanes -------
             done = np.asarray(jax.device_get(st.lane_done(state)))
-            finished = [lane for lane in active if done[lane]]
+            codes = np.asarray(jax.device_get(st.fault_code(state)))
+            pol.observe(stats.segments, time.perf_counter() - t_seg)
+            t_now = now()
+            # Fault beats done: a lane that faulted while (or before)
+            # reaching the exit block produced invalid tokens.
+            faulted = [lane for lane in active if codes[lane] != 0]
+            finished = [lane for lane in active
+                        if done[lane] and codes[lane] == 0]
+            timed_out = [
+                lane for lane, e in active.items()
+                if lane not in faulted and lane not in finished
+                and e["deadline_at"] is not None
+                and t_now >= e["deadline_at"]
+            ]
+            park_mask = np.zeros((z,), bool)
+            for lane in faulted:
+                e = active.pop(lane)
+                free.append(lane)
+                park_mask[lane] = True
+                _retry_or_terminal(
+                    e, "faulted", lane, t_now,
+                    fault=pc_vm.FAULT_NAMES[int(codes[lane])],
+                )
+            for lane in timed_out:
+                e = active.pop(lane)
+                free.append(lane)
+                park_mask[lane] = True
+                _retry_or_terminal(e, "timeout", lane, t_now)
             if finished:
                 outs = st.outputs(state)
                 tokens = np.asarray(jax.device_get(outs["tokens"]))
                 lengths = np.asarray(jax.device_get(outs["lengths"]))
-                t_fin = now()
                 for lane in finished:
-                    r, t_admit = active.pop(lane)
-                    comp = Completion(
-                        rid=r.rid,
-                        tokens=tokens[lane, : int(lengths[lane])].copy(),
-                        lane=lane,
-                        arrival=r.arrival,
-                        admitted=t_admit,
-                        finished=t_fin,
-                    )
-                    completions.append(comp)
+                    e = active.pop(lane)
+                    toks = tokens[lane, : int(lengths[lane])].copy()
+                    _terminal(e, "ok", lane, t_now, tokens=toks)
                     stats.generated_tokens += int(lengths[lane])
                     free.append(lane)
-                    if on_finish is not None:
-                        on_finish(comp)
+            if park_mask.any():
+                # Idle the retired-with-prejudice lanes (a later inject
+                # clears their fault codes).
+                state = st.park(state, park_mask)
 
+            # ---- crash-resume snapshot ------------------------------
+            if (ckpt is not None and cfg.checkpoint_every_segments
+                    and stats.segments % cfg.checkpoint_every_segments
+                    == 0):
+                _save_checkpoint()
+
+        if ckpt is not None:
+            # Final snapshot: a resume after completion is a no-op run.
+            _save_checkpoint()
         stats.vm_steps = st.steps(state)
         stats.completions = len(completions)
         stats.wall_time = time.perf_counter() - t0
         stats.occupancy = (
             stats._occ_acc / stats.segments if stats.segments else 0.0
         )
+        stats.straggler_events = len(pol.flagged)
         completions.sort(key=lambda c: c.rid)
         return completions, stats
 

@@ -1,0 +1,242 @@
+"""Per-lane fault containment: quarantine vs raise policies, fault codes
+(NONFINITE / WATCHDOG / STACK_OVERFLOW), exception attributes, healthy-lane
+bit-exactness across the schedule x fuse x mesh matrix, and the stepper's
+fault surface (``tools/chaos.py`` is the CLI face of the same harness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batching, frontend, pc_vm
+from repro.core.frontend import spec
+
+from tools.chaos import (
+    EXPECT_CODE,
+    LANE_STEP_BUDGET,
+    MAX_DEPTH,
+    build_chaos_program,
+    make_modes,
+    run_cell,
+)
+
+I32 = spec((), jnp.int32)
+F32 = spec((), jnp.float32)
+
+
+def _sqrt_program():
+    """``f(x) = sqrt(x)``: negative lanes write NaN into VM state."""
+    pb = frontend.ProgramBuilder(main="f")
+    fb = pb.function("f", ["x"], ["out"], {"x": F32}, {"out": F32})
+    fb.assign("out", lambda x: jnp.sqrt(x), ["x"], name="root")
+    fb.return_()
+    pb.add(fb)
+    return pb.build()
+
+
+def _chaos_fn(**kw):
+    opts = dict(
+        backend="pc", batch_size=8, max_depth=MAX_DEPTH,
+        max_steps=100_000, detect_nonfinite=True,
+        lane_step_budget=LANE_STEP_BUDGET,
+    )
+    opts.update(kw)
+    return batching.autobatch(build_chaos_program(), **opts)
+
+
+X8 = jnp.arange(8, dtype=jnp.int32) * 37
+
+
+class TestQuarantine:
+    def test_nonfinite_quarantined_lanes_flagged_healthy_exact(self):
+        fn = batching.autobatch(
+            _sqrt_program(), backend="pc", batch_size=4,
+            on_fault="quarantine", detect_nonfinite=True,
+        )
+        x = jnp.asarray([1.0, 4.0, -1.0, 9.0], jnp.float32)
+        out = np.asarray(fn(x)["out"])
+        codes = np.asarray(jax.device_get(fn.last_result.fault_code))
+        np.testing.assert_array_equal(
+            codes, [0, 0, pc_vm.FAULT_NONFINITE, 0]
+        )
+        np.testing.assert_array_equal(out[[0, 1, 3]], [1.0, 2.0, 3.0])
+
+    def test_nonfinite_check_is_opt_in(self):
+        """Without detect_nonfinite, NaN flows through unfaulted (the
+        historical behavior — finiteness checks cost a reduce per write)."""
+        fn = batching.autobatch(
+            _sqrt_program(), backend="pc", batch_size=2,
+        )
+        out = np.asarray(fn(jnp.asarray([-1.0, 4.0], jnp.float32))["out"])
+        assert np.isnan(out[0]) and out[1] == 2.0
+        codes = np.asarray(jax.device_get(fn.last_result.fault_code))
+        assert not codes.any()
+
+    @pytest.mark.parametrize("mode,code", [
+        (1, pc_vm.FAULT_NONFINITE),
+        (2, pc_vm.FAULT_WATCHDOG),
+        (3, pc_vm.FAULT_STACK_OVERFLOW),
+    ])
+    def test_each_fault_kind_quarantines(self, mode, code):
+        fn = _chaos_fn(on_fault="quarantine")
+        modes = np.zeros((8,), np.int32)
+        modes[2] = modes[5] = mode
+        clean = np.asarray(fn(X8, jnp.zeros((8,), jnp.int32))["out"])
+        out = np.asarray(fn(X8, jnp.asarray(modes))["out"])
+        codes = np.asarray(jax.device_get(fn.last_result.fault_code))
+        expect = np.where(modes == mode, code, 0)
+        np.testing.assert_array_equal(codes, expect)
+        healthy = modes == 0
+        np.testing.assert_array_equal(out[healthy], clean[healthy])
+
+    def test_converges_with_every_kind_at_once(self):
+        """A mixed batch (NaN + livelock + overflow together) terminates
+        and contains each fault to its own lane."""
+        fn = _chaos_fn(on_fault="quarantine")
+        modes = np.array([0, 1, 2, 3, 0, 3, 2, 1], np.int32)
+        clean = np.asarray(fn(X8, jnp.zeros((8,), jnp.int32))["out"])
+        out = np.asarray(fn(X8, jnp.asarray(modes))["out"])
+        codes = np.asarray(jax.device_get(fn.last_result.fault_code))
+        np.testing.assert_array_equal(
+            codes, [EXPECT_CODE[int(m)] for m in modes]
+        )
+        np.testing.assert_array_equal(out[modes == 0], clean[modes == 0])
+
+
+class TestRaisePolicy:
+    def test_nonfinite_raises_lanefault_with_lanes(self):
+        fn = batching.autobatch(
+            _sqrt_program(), backend="pc", batch_size=4,
+            on_fault="raise", detect_nonfinite=True,
+        )
+        x = jnp.asarray([1.0, -4.0, 9.0, -16.0], jnp.float32)
+        with pytest.raises(pc_vm.LaneFault) as ei:
+            fn(x)
+        np.testing.assert_array_equal(ei.value.lanes, [1, 3])
+        assert ei.value.faults == {1: "nonfinite", 3: "nonfinite"}
+        assert "quarantine" in str(ei.value)
+
+    def test_watchdog_raises_and_fails_fast(self):
+        """Raise-mode watchdog halts the while_loop at the first fault —
+        it must not spin to max_steps before reporting."""
+        fn = _chaos_fn(on_fault="raise", max_steps=10_000_000)
+        modes = np.zeros((8,), np.int32)
+        modes[3] = 2
+        with pytest.raises(pc_vm.LaneFault) as ei:
+            fn(X8, jnp.asarray(modes))
+        assert ei.value.faults == {3: "watchdog"}
+
+    def test_overflow_carries_mask_and_lanes(self):
+        fn = _chaos_fn(on_fault="raise")
+        modes = np.zeros((8,), np.int32)
+        modes[0] = modes[6] = 3
+        with pytest.raises(pc_vm.StackOverflow) as ei:
+            fn(X8, jnp.asarray(modes))
+        np.testing.assert_array_equal(
+            np.asarray(ei.value.depth_exceeded), modes == 3
+        )
+        np.testing.assert_array_equal(ei.value.lanes, [0, 6])
+
+
+class TestValidation:
+    def test_bad_on_fault_rejected(self):
+        with pytest.raises(ValueError, match="on_fault"):
+            batching.autobatch(
+                _sqrt_program(), backend="pc", on_fault="ignore"
+            )
+
+    def test_bad_lane_step_budget_rejected(self):
+        with pytest.raises(ValueError, match="lane_step_budget"):
+            pc_vm.VMConfig(batch_size=2, lane_step_budget=0)
+
+
+class TestMatrix:
+    """The chaos harness's own acceptance: healthy lanes bit-exact with a
+    fault-free run across schedule x fuse (x mesh where available)."""
+
+    @pytest.mark.parametrize("schedule", pc_vm.SCHEDULES)
+    @pytest.mark.parametrize("fuse", [True, False])
+    def test_quarantine_matrix_cell(self, schedule, fuse):
+        r = run_cell(
+            build_chaos_program(), batch=8,
+            modes=make_modes(8, 0.375, seed=0),
+            schedule=schedule, fuse=fuse, mesh=None, seed=0,
+        )
+        assert r["ok"], r["violations"]
+        assert r["faulted_lanes"] >= 3  # one of each kind at least
+
+    def test_quarantine_mesh_cell(self):
+        if jax.device_count() < 2:
+            pytest.skip("needs >= 2 devices (see tests/conftest.py)")
+        r = run_cell(
+            build_chaos_program(), batch=8,
+            modes=make_modes(8, 0.375, seed=0),
+            schedule="earliest", fuse=True, mesh=2, seed=0,
+        )
+        assert r["ok"], r["violations"]
+
+
+class TestStepperFaults:
+    def _drive(self, st, state):
+        while not st.done(state):
+            state = st.step(state, 64)
+        return state
+
+    def test_fault_surface_and_inject_clears(self):
+        fn = _chaos_fn(on_fault="quarantine")
+        modes = np.array([0, 2, 0, 1, 0, 0, 3, 0], np.int32)
+        st = fn.stepper(X8, jnp.asarray(modes))
+        state = self._drive(st, st.init())
+        codes = np.asarray(jax.device_get(st.fault_code(state)))
+        np.testing.assert_array_equal(
+            codes, [EXPECT_CODE[int(m)] for m in modes]
+        )
+        flagged = np.asarray(jax.device_get(st.lane_faulted(state)))
+        np.testing.assert_array_equal(flagged, modes != 0)
+        # Re-inject healthy work into the faulted lanes: faults clear and
+        # the lanes run to completion again.
+        mask = modes != 0
+        state = st.inject(
+            state, mask, X8, jnp.zeros((8,), jnp.int32)
+        )
+        assert not np.asarray(
+            jax.device_get(st.lane_faulted(state))
+        ).any()
+        state = self._drive(st, state)
+        codes = np.asarray(jax.device_get(st.fault_code(state)))
+        assert not codes.any()
+        clean = np.asarray(fn(X8, jnp.zeros((8,), jnp.int32))["out"])
+        out = np.asarray(jax.device_get(st.outputs(state)["out"]))
+        np.testing.assert_array_equal(out, clean)
+
+    def test_result_raises_under_raise_policy_only(self):
+        modes = np.array([0, 1, 0, 0, 0, 0, 0, 0], np.int32)
+        fn = _chaos_fn(on_fault="raise")
+        st = fn.stepper(X8, jnp.asarray(modes))
+        state = self._drive(st, st.init())
+        with pytest.raises(pc_vm.LaneFault):
+            st.result(state)
+        fn2 = _chaos_fn(on_fault="quarantine")
+        st2 = fn2.stepper(X8, jnp.asarray(modes))
+        state2 = self._drive(st2, st2.init())
+        st2.result(state2)  # quarantine: no raise, codes tell the story
+
+
+class TestCacheKey:
+    def test_fault_knobs_are_part_of_the_executor_key(self):
+        """Two wrappers over one program with different fault knobs must
+        not share executors (the knobs change compiled behavior)."""
+        prog = _sqrt_program()
+        a = batching.autobatch(prog, backend="pc", batch_size=2,
+                               on_fault="quarantine",
+                               detect_nonfinite=True)
+        b = batching.autobatch(prog, backend="pc", batch_size=2)
+        x = jnp.asarray([-1.0, 4.0], jnp.float32)
+        a(x)
+        b(x)
+        assert np.asarray(
+            jax.device_get(a.last_result.fault_code)
+        ).any()
+        assert not np.asarray(
+            jax.device_get(b.last_result.fault_code)
+        ).any()
+        assert a._aval_key({"x": x}, 2) != b._aval_key({"x": x}, 2)

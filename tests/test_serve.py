@@ -301,6 +301,156 @@ class TestContinuousServe:
             eng.serve([Request(rid=0, prompt=np.ones((2,), np.int32))])
 
 
+class TestServeResilience:
+    """Fault containment + degraded execution in the open-loop server:
+    bounded queue shedding, deadlines, retry with backoff, quarantined
+    lane faults, and crash-resume from a Checkpointer snapshot."""
+
+    def _engine(self, small_lm, lanes=2, segment_steps=8, **kw):
+        m, params = small_lm
+        ecfg = EngineConfig(
+            lanes=lanes, max_context=32, max_prompt_len=5, max_new_tokens=6,
+            requests_per_lane=1, eos_id=0, backend="pc",
+            segment_steps=segment_steps, **kw,
+        )
+        return m, GenerationEngine(m, params, ecfg)
+
+    def _reqs(self, m, n, seed=5, plen=None, arrival=0.0):
+        rng = np.random.default_rng(seed)
+        return [
+            Request(
+                rid=i,
+                prompt=rng.integers(
+                    1, m.cfg.vocab_size, (plen or (1 + i % 4),)
+                ).astype(np.int32),
+                arrival=arrival,
+            )
+            for i in range(n)
+        ]
+
+    def test_bounded_queue_sheds_as_rejected(self, small_lm):
+        """1 lane + capacity-1 queue + 4 simultaneous arrivals: exactly
+        two requests are shed with a terminal 'rejected' completion."""
+        m, eng = self._engine(small_lm, lanes=1, queue_capacity=1)
+        comps, stats = eng.serve(self._reqs(m, 4))
+        assert stats.rejected == 2 and stats.ok == 2
+        assert stats.completions == 4  # every request terminal
+        by = {c.rid: c for c in comps}
+        rejected = [c for c in comps if c.status == "rejected"]
+        assert all(c.lane == -1 and c.tokens.size == 0 for c in rejected)
+        assert by[0].status == "ok"  # first arrival got the lane
+
+    def test_deadline_times_out_inflight_and_queued(self, small_lm):
+        """A 1s deadline on a virtual clock that advances 0.6s per
+        observation: both the in-flight and the queued request time out
+        (no retries configured => terminal 'timeout')."""
+        m, eng = self._engine(small_lm, lanes=1, deadline_s=1.0)
+        t = {"now": 0.0}
+
+        def clock():
+            t["now"] += 0.6
+            return t["now"]
+
+        comps, stats = eng.serve(
+            self._reqs(m, 2, plen=4), now_fn=clock
+        )
+        assert stats.timeout == 2 and stats.completions == 2
+        assert all(c.status == "timeout" for c in comps)
+
+    def test_watchdog_fault_retries_then_terminal(self, small_lm):
+        """A lane-step budget no request can meet: every attempt faults
+        'watchdog', each request retries once (backoff 0), and resolves
+        terminally as 'faulted' with attempts == max_attempts."""
+        m, eng = self._engine(
+            small_lm, lanes=2, lane_step_budget=3, max_attempts=2,
+            retry_backoff_s=0.0,
+        )
+        comps, stats = eng.serve(self._reqs(m, 2, plen=3))
+        assert stats.retries == 2 and stats.faulted == 2
+        for c in comps:
+            assert c.status == "faulted"
+            assert c.fault == "watchdog"
+            assert c.attempts == 2
+            assert c.tokens.size == 0
+
+    def test_faults_do_not_perturb_healthy_lanes(self, small_lm):
+        """A faulting request shares the batch with healthy ones: the
+        healthy completions stay bit-exact with a fault-free serve."""
+        m, eng = self._engine(
+            small_lm, lanes=2, lane_step_budget=64, max_attempts=1,
+        )
+        healthy = self._reqs(m, 3, plen=2)
+        clean, _ = eng.serve(healthy)
+        # rid 3: max-length prompt and the budget tuned so only it trips.
+        hog = Request(rid=3, prompt=np.full((5,), 1, np.int32))
+        comps, stats = eng.serve(healthy + [hog])
+        assert {c.rid for c in comps} == {0, 1, 2, 3}
+        by = {c.rid: c for c in comps}
+        if stats.faulted:  # the hog tripped the watchdog
+            assert by[3].status == "faulted"
+        for c in clean:
+            np.testing.assert_array_equal(by[c.rid].tokens, c.tokens)
+            assert by[c.rid].status == "ok"
+
+    def test_crash_resume_completes_all_requests(self, small_lm, tmp_path):
+        """Kill the host loop after two completions; a fresh engine with
+        resume=True finishes every remaining request with tokens
+        bit-exact to an uninterrupted run (at-least-once delivery)."""
+        m, params = small_lm
+
+        def mk(d):
+            ecfg = EngineConfig(
+                lanes=2, max_context=32, max_prompt_len=5,
+                max_new_tokens=6, requests_per_lane=1, eos_id=0,
+                backend="pc", segment_steps=4,
+                checkpoint_dir=str(d), checkpoint_every_segments=1,
+            )
+            return GenerationEngine(m, params, ecfg)
+
+        reqs = self._reqs(m, 5, seed=7)
+
+        class Crash(Exception):
+            pass
+
+        seen = []
+
+        def boom(c):
+            seen.append(c)
+            if len(seen) == 2:
+                raise Crash
+
+        eng = mk(tmp_path / "a")
+        with pytest.raises(Crash):
+            eng.serve(reqs, on_finish=boom)
+        comps, stats = mk(tmp_path / "a").serve(reqs, resume=True)
+        got = {c.rid for c in comps}
+        assert {c.rid for c in seen} | got == {0, 1, 2, 3, 4}
+        assert all(c.status == "ok" for c in comps)
+        clean, _ = mk(tmp_path / "b").serve(reqs)
+        ref = {c.rid: c.tokens for c in clean}
+        for c in comps:
+            np.testing.assert_array_equal(c.tokens, ref[c.rid])
+        # resume after completion is a no-op (all rids recorded done)
+        again, stats2 = mk(tmp_path / "a").serve(reqs, resume=True)
+        assert again == [] and stats2.completions == 0
+
+    def test_resume_requires_checkpoint_dir(self, small_lm):
+        m, eng = self._engine(small_lm, lanes=1)
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            eng.serve(self._reqs(m, 1), resume=True)
+
+    def test_straggler_policy_wired(self, small_lm):
+        """A caller-supplied StragglerPolicy observes per-segment
+        latencies; stats mirror its flagged count."""
+        from repro.train.fault_tolerance import StragglerPolicy
+
+        m, eng = self._engine(small_lm, lanes=2)
+        pol = StragglerPolicy(threshold=3.0, warmup=2)
+        _, stats = eng.serve(self._reqs(m, 3), straggler=pol)
+        assert stats.straggler_events == len(pol.flagged)
+        assert pol._n >= stats.segments > 0
+
+
 class TestServeSteps:
     def test_prefill_matches_decode_chain(self, small_lm):
         m, params = small_lm

@@ -1,0 +1,334 @@
+"""Fault-injection chaos harness for the pc VM's containment layer.
+
+    PYTHONPATH=src python tools/chaos.py [--rate 0.25] [--batch 16]
+                                         [--seed 0] [--json PATH]
+
+Builds one deliberately hostile program with four per-lane behaviours,
+selected by a ``mode`` input:
+
+* ``mode 0`` — healthy: a bounded Collatz-flavoured loop (the control).
+* ``mode 1`` — NaN: writes ``0/0`` into VM state (``NONFINITE`` fault).
+* ``mode 2`` — livelock: a data-dependent loop that never exits
+  (``WATCHDOG`` fault via ``lane_step_budget``).
+* ``mode 3`` — bomb: recursion deeper than ``max_depth``
+  (``STACK_OVERFLOW`` fault).
+
+For every cell of the schedule x fuse x mesh matrix it runs the batch
+twice through the SAME executor — once fault-free (all lanes mode 0) and
+once with faults injected at ``--rate`` (mix of modes 1-3) — under
+``on_fault="quarantine"``, and asserts:
+
+1. the chaotic run never aborts (no exception escapes the VM);
+2. every injected lane reports exactly its expected fault code, and no
+   healthy lane reports any fault;
+3. healthy lanes' outputs are **bit-exact** with the fault-free run.
+
+Exit status 1 on any violation; ``--json`` writes a strict-JSON record
+per cell (CI uploads it next to the benchmark artifacts).
+"""
+from __future__ import annotations
+
+import os
+
+if "XLA_FLAGS" not in os.environ:  # before jax init: allow mesh cells
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core import batching, frontend, pc_vm  # noqa: E402
+from repro.core.frontend import spec  # noqa: E402
+
+I32 = spec((), jnp.int32)
+F32 = spec((), jnp.float32)
+
+#: Harness VM limits: the bomb recurses past MAX_DEPTH, the livelock spins
+#: past LANE_STEP_BUDGET; both bounds clear every healthy lane's needs by
+#: a wide margin (healthy lanes run < 200 dispatches, depth 2).
+MAX_DEPTH = 8
+LANE_STEP_BUDGET = 512
+BOMB_DEPTH = 4 * MAX_DEPTH
+
+#: mode -> expected per-lane fault code after a quarantined run.
+EXPECT_CODE = {
+    0: pc_vm.FAULT_OK,
+    1: pc_vm.FAULT_NONFINITE,
+    2: pc_vm.FAULT_WATCHDOG,
+    3: pc_vm.FAULT_STACK_OVERFLOW,
+}
+FAULT_MODES = (1, 2, 3)
+
+
+def build_chaos_program():
+    """``chaos(x, mode) -> out``: per-lane behaviour selected by mode."""
+    pb = frontend.ProgramBuilder(main="chaos")
+
+    # Unbounded recursion helper (mode 3's stack bomb).
+    rec = pb.function("rec", ["n"], ["r"], {"n": I32}, {"r": I32})
+    rec.const(0, jnp.int32, out="r")
+    rec.assign("go", lambda n: n > 0, ["n"], name="rec_cond")
+    with rec.if_("go"):
+        rec.assign("nm1", lambda n: n - 1, ["n"], name="rec_dec")
+        rec.call("rec", ["nm1"], out="sub")
+        rec.assign("r", lambda s: s + 1, ["sub"], name="rec_inc")
+    rec.return_()
+    pb.add(rec)
+
+    fb = pb.function(
+        "chaos", ["x", "mode"], ["out"],
+        {"x": I32, "mode": I32}, {"out": F32},
+    )
+    fb.const(0.0, jnp.float32, out="out")
+    # ---- healthy control work (every mode runs it) ----
+    fb.assign("v", lambda x: (x % 97 + 1).astype(jnp.int32), ["x"],
+              name="seed_v")
+    fb.const(0, jnp.int32, out="i")
+    with fb.while_(
+        lambda i, v: jnp.logical_and(i < 32, v != 1), ["i", "v"]
+    ):
+        fb.assign(
+            "v",
+            lambda v: jnp.where(v % 2 == 0, v // 2, 3 * v + 1)
+            .astype(jnp.int32),
+            ["v"], name="collatz",
+        )
+        fb.assign("i", lambda i: i + 1, ["i"], name="inc_i")
+    fb.assign("out", lambda v, i: (v * 100 + i).astype(jnp.float32),
+              ["v", "i"], name="healthy_out")
+    # ---- mode 1: non-finite write ----
+    fb.assign("is_nan", lambda m: m == 1, ["mode"], name="sel_nan")
+    with fb.if_("is_nan"):
+        fb.assign("out", lambda o: o * jnp.float32(jnp.nan), ["out"],
+                  name="poison")
+    # ---- mode 2: livelock (v >= 1 here, forever) ----
+    fb.assign("is_live", lambda m: m == 2, ["mode"], name="sel_live")
+    with fb.if_("is_live"):
+        with fb.while_(lambda v: v >= 1, ["v"]):
+            fb.assign("v", lambda v: jnp.maximum(v, 1), ["v"],
+                      name="spin")
+    # ---- mode 3: recursion past max_depth ----
+    fb.assign("is_bomb", lambda m: m == 3, ["mode"], name="sel_bomb")
+    with fb.if_("is_bomb"):
+        fb.const(BOMB_DEPTH, jnp.int32, out="bomb_n")
+        fb.call("rec", ["bomb_n"], out="deep")
+        fb.assign("out", lambda d: d.astype(jnp.float32), ["deep"],
+                  name="bomb_out")
+    fb.return_()
+    pb.add(fb)
+    return pb.build()
+
+
+class ChaosModel:
+    """LM wrapper injecting per-lane serving faults, keyed by sentinel
+    prompt tokens (``benchmarks/serve_bench --chaos``).
+
+    * prompt ``[nan_token]`` (vocab-1): the lane's KV-cache slice is
+      poisoned with NaN on its first decode — the VM's opt-in
+      ``detect_nonfinite`` check faults the lane (``NONFINITE``) the
+      moment the poisoned cache is written back into VM state.
+    * prompt ``[slow_token]`` (vocab-2): logits are forced to re-emit
+      ``slow_token`` forever, so the lane never reaches EOS and burns
+      decode steps until the ``lane_step_budget`` watchdog fires
+      (``WATCHDOG`` — the serving analogue of a livelock).
+    * any other token: behaves like the wrapped model, except EOS is
+      forced once ``pos >= eos_pos`` so healthy requests finish in
+      bounded, *known* work (which makes the watchdog budget separable:
+      healthy lanes execute < 2x a calibrated fault-free run, slow lanes
+      need ~``max_new/eos_pos`` x).
+
+    Faults only touch the injecting lane's own batch slice, so healthy
+    lanes' tokens are bit-exact with a chaos-free serve of the same
+    requests.
+    """
+
+    def __init__(self, inner, *, eos_pos: int, eos_id: int = 0):
+        from repro.serve.engine import _cache_layout
+
+        self.inner = inner
+        self.cfg = inner.cfg
+        self.nan_token = inner.cfg.vocab_size - 1
+        self.slow_token = inner.cfg.vocab_size - 2
+        self.eos_pos = eos_pos
+        self.eos_id = eos_id
+        # Per-leaf batch axes of the native cache layout (window-invariant).
+        _, self._axes, _ = _cache_layout(inner, 8)
+
+    def init(self, key):
+        return self.inner.init(key)
+
+    def init_cache(self, batch: int, window: int):
+        return self.inner.init_cache(batch, window)
+
+    def decode_step(self, params, cache, token, pos):
+        logits, new_cache = self.inner.decode_step(params, cache, token,
+                                                   pos)
+        is_slow = token == self.slow_token
+        is_nan = token == self.nan_token
+        floor = jnp.full_like(logits, -1e9)
+        slow_logits = floor.at[:, self.slow_token].set(0.0)
+        eos_logits = floor.at[:, self.eos_id].set(0.0)
+        force_eos = jnp.logical_and(
+            jnp.logical_not(is_slow), pos >= self.eos_pos
+        )
+        logits = jnp.where(is_slow[:, None], slow_logits, logits)
+        logits = jnp.where(force_eos[:, None], eos_logits, logits)
+        poison = jnp.where(is_nan, jnp.float32(jnp.nan), jnp.float32(0.0))
+        leaves, treedef = jax.tree_util.tree_flatten(new_cache)
+        out_leaves = []
+        for leaf, ax in zip(leaves, self._axes):
+            if jnp.issubdtype(leaf.dtype, jnp.inexact):
+                shape = [1] * leaf.ndim
+                shape[ax] = -1
+                leaf = leaf + poison.reshape(shape).astype(leaf.dtype)
+            out_leaves.append(leaf)
+        return logits, jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+
+def make_modes(batch: int, rate: float, seed: int) -> np.ndarray:
+    """Per-lane fault modes: ~``rate`` of the batch split across modes 1-3
+    (at least one lane of each kind when any faults are requested)."""
+    rng = np.random.default_rng(seed)
+    modes = np.zeros((batch,), np.int32)
+    n_fault = int(round(batch * rate))
+    if rate > 0:
+        n_fault = max(n_fault, len(FAULT_MODES))
+    n_fault = min(n_fault, batch - 1)  # keep at least one healthy lane
+    lanes = rng.choice(batch, size=n_fault, replace=False)
+    for i, lane in enumerate(lanes):
+        modes[lane] = FAULT_MODES[i % len(FAULT_MODES)]
+    return modes
+
+
+def run_cell(program, *, batch: int, modes: np.ndarray, schedule: str,
+             fuse: bool, mesh, seed: int) -> dict:
+    """One matrix cell: clean + chaotic run through one executor."""
+    batched = batching.autobatch(
+        program,
+        backend="pc", batch_size=batch, max_depth=MAX_DEPTH,
+        max_steps=200_000, schedule=schedule, fuse=fuse, mesh=mesh,
+        on_fault="quarantine", detect_nonfinite=True,
+        lane_step_budget=LANE_STEP_BUDGET,
+    )
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 10_000, (batch,)).astype(np.int32)
+    record = {
+        "schedule": schedule, "fuse": fuse, "mesh": mesh or 1,
+        "batch": batch,
+        "injected": {
+            pc_vm.FAULT_NAMES[EXPECT_CODE[m]]: int((modes == m).sum())
+            for m in FAULT_MODES
+        },
+        "violations": [],
+    }
+
+    clean = np.asarray(batched(jnp.asarray(x),
+                               jnp.zeros((batch,), jnp.int32))["out"])
+    clean_codes = np.asarray(
+        jax.device_get(batched.last_result.fault_code)
+    )
+    if clean_codes.any():
+        record["violations"].append(
+            f"fault-free run reported faults: {clean_codes.tolist()}"
+        )
+
+    try:
+        chaotic = np.asarray(
+            batched(jnp.asarray(x), jnp.asarray(modes))["out"]
+        )
+    except Exception as e:  # criterion 1: must never abort
+        record["violations"].append(
+            f"chaotic run aborted: {type(e).__name__}: {e}"
+        )
+        return record
+    codes = np.asarray(jax.device_get(batched.last_result.fault_code))
+
+    expect = np.array([EXPECT_CODE[int(m)] for m in modes], np.int32)
+    if not np.array_equal(codes, expect):
+        bad = np.flatnonzero(codes != expect)
+        record["violations"].append(
+            "fault codes != expected at lanes "
+            f"{bad.tolist()}: got {codes[bad].tolist()}, "
+            f"want {expect[bad].tolist()}"
+        )
+    healthy = modes == 0
+    if not np.array_equal(chaotic[healthy], clean[healthy]):
+        bad = np.flatnonzero(healthy & (chaotic != clean))
+        record["violations"].append(
+            f"healthy lanes not bit-exact at {bad.tolist()}: "
+            f"chaotic {chaotic[bad].tolist()} vs clean {clean[bad].tolist()}"
+        )
+    record["healthy_lanes"] = int(healthy.sum())
+    record["faulted_lanes"] = int((codes != 0).sum())
+    record["ok"] = not record["violations"]
+    return record
+
+
+def run_matrix(*, batch: int = 16, rate: float = 0.25,
+               seed: int = 0) -> list[dict]:
+    """The full schedule x fuse x mesh containment matrix."""
+    program = build_chaos_program()
+    modes = make_modes(batch, rate, seed)
+    meshes = [None]
+    if jax.device_count() >= 2 and batch % 2 == 0:
+        meshes.append(2)
+    records = []
+    for schedule in pc_vm.SCHEDULES:
+        for fuse in (True, False):
+            for mesh in meshes:
+                records.append(run_cell(
+                    program, batch=batch, modes=modes,
+                    schedule=schedule, fuse=fuse, mesh=mesh, seed=seed,
+                ))
+    return records
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.25,
+                    help="fraction of lanes injected with faults "
+                         "(split across NaN / livelock / overflow)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-cell records (strict JSON)")
+    args = ap.parse_args(argv)
+    if not 0.0 < args.rate < 1.0:
+        ap.error(f"--rate must be in (0, 1), got {args.rate}")
+    records = run_matrix(batch=args.batch, rate=args.rate, seed=args.seed)
+    bad = [r for r in records if not r.get("ok")]
+    for r in records:
+        cell = (f"schedule={r['schedule']:<9} fuse={int(r['fuse'])} "
+                f"mesh={r['mesh']}")
+        if r.get("ok"):
+            print(f"[ok]   {cell}  healthy={r['healthy_lanes']} "
+                  f"faulted={r['faulted_lanes']}")
+        else:
+            print(f"[FAIL] {cell}")
+            for v in r["violations"]:
+                print(f"       - {v}")
+    print(f"\nchaos matrix: {len(records) - len(bad)}/{len(records)} "
+          f"cells clean (batch={args.batch}, rate={args.rate}, "
+          f"seed={args.seed})")
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json, {
+            "benchmark": "chaos_matrix",
+            "config": {"batch": args.batch, "rate": args.rate,
+                       "seed": args.seed},
+            "records": records,
+        })
+        print(f"[wrote {args.json}: {len(records)} records]")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
