@@ -14,10 +14,14 @@ Arms (matching the paper's, adapted to JAX per DESIGN.md §2):
                     expert-manual-effort ceiling the paper cites.
 
 The ``pc`` arm expands into one column per ``--schedule`` x ``--fuse`` x
-``--mesh`` combination (e.g. ``--schedule earliest,popular --fuse on,off
---mesh none,8``), so the dispatch-overhead win of superblock fusion /
-occupancy scheduling and the multi-device scaling of lane sharding are
-*measured in the same run* as the seed baseline rather than asserted.
+``--mesh`` x ``--compact-every`` x ``--use-kernel`` combination (e.g.
+``--schedule earliest,popular --fuse on,off --mesh none,8
+--compact-every none,1``), so the dispatch-overhead win of superblock
+fusion / occupancy scheduling, the multi-device scaling of lane sharding,
+and the tile-occupancy recovery of lane compaction are *measured in the
+same run* as the seed baseline rather than asserted.  Each pc record
+carries ``mean_occupancy`` (tile-based SIMD occupancy) and
+``mean_lane_occupancy`` (whole-batch) so the two effects are separable.
 
 ``--mesh`` values are device counts (``none`` = unsharded single-device);
 on CPU, fake a mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count
@@ -44,17 +48,23 @@ from repro.mcmc import iterative, nuts, targets
 
 from .common import Table, best_of, write_json
 
-#: (schedule, fuse, mesh) combinations the plain "pc" arm expands into
-#: (mesh=None means unsharded single-device execution).
-DEFAULT_PC_VARIANTS = (("earliest", True, None),)
+#: (schedule, fuse, mesh, compact_every, use_kernel) combinations the
+#: plain "pc" arm expands into (mesh=None means unsharded single-device
+#: execution; compact_every=None means no lane compaction).
+DEFAULT_PC_VARIANTS = (("earliest", True, None, None, False),)
 
 
-def pc_arm_name(schedule: str, fuse: bool, mesh, *, solo: bool) -> str:
+def pc_arm_name(schedule: str, fuse: bool, mesh, compact_every=None,
+                use_kernel: bool = False, *, solo: bool) -> str:
     if solo:
         return "pc"
     parts = [schedule, "fuse" if fuse else "nofuse"]
     if mesh is not None:
         parts.append(f"mesh{getattr(mesh, 'size', mesh)}")
+    if compact_every is not None:
+        parts.append(f"ce{compact_every}")
+    if use_kernel:
+        parts.append("kernel")
     return f"pc[{','.join(parts)}]"
 
 
@@ -82,17 +92,20 @@ def throughput_sweep(
     )
     gpl = settings.grads_per_leaf
 
-    # Expand the "pc" arm into one column per (schedule, fuse, mesh)
-    # variant.
+    # Expand the "pc" arm into one column per
+    # (schedule, fuse, mesh, compact_every, use_kernel) variant.
     solo = len(pc_variants) == 1
     columns: list[str] = []
-    pc_meta: dict[str, tuple[str, bool, object]] = {}
+    pc_meta: dict[str, tuple] = {}
     for arm in arms:
         if arm == "pc":
-            for sched, fz, mesh in pc_variants:
-                name = pc_arm_name(sched, fz, mesh, solo=solo)
+            for variant in pc_variants:
+                # Back-compat: 3-tuples from older callers mean
+                # (schedule, fuse, mesh) with no compaction / kernel.
+                sched, fz, mesh, ce, uk = (*variant, None, False)[:5]
+                name = pc_arm_name(sched, fz, mesh, ce, uk, solo=solo)
                 columns.append(name)
-                pc_meta[name] = (sched, fz, mesh)
+                pc_meta[name] = (sched, fz, mesh, ce, uk)
         else:
             columns.append(arm)
 
@@ -106,10 +119,11 @@ def throughput_sweep(
     # lowering are built once and shared across every batch size in the
     # sweep — only the per-batch-size executors are (re)compiled.
     kernels = {}
-    for name, (sched, fz, mesh) in pc_meta.items():
+    for name, (sched, fz, mesh, ce, uk) in pc_meta.items():
         kernels[name] = nuts.make_nuts_kernel(
             target, settings, backend="pc", max_steps=500_000,
             schedule=sched, fuse=fz, mesh=mesh, verify=verify,
+            compact_every=ce, use_kernel=uk,
         )
     for arm in ("local", "local_eager"):
         if arm in arms:
@@ -125,7 +139,7 @@ def throughput_sweep(
         # expectation): reuse an *unsharded* pc kernel when one is in the
         # sweep anyway (a mesh kernel would reject non-divisible batches).
         counter = next(
-            (kernels[n] for n, (_, _, m) in pc_meta.items() if m is None),
+            (kernels[n] for n, meta in pc_meta.items() if meta[2] is None),
             None,
         ) or nuts.make_nuts_kernel(target, settings, max_steps=500_000)
 
@@ -138,10 +152,11 @@ def throughput_sweep(
     def record(arm: str, z: int, gps: float, **extra) -> float:
         rec = {"arm": arm, "batch": z, "grads_per_sec": gps}
         if arm in pc_meta:
-            sched, fz, mesh = pc_meta[arm]
+            sched, fz, mesh, ce, uk = pc_meta[arm]
             ndev = ndev_of(mesh)
             rec.update(schedule=sched, fuse=fz, mesh=ndev,
-                       per_device_batch=z // ndev)
+                       per_device_batch=z // ndev,
+                       compact_every=ce, use_kernel=uk)
         rec.update(extra)
         records.append(rec)
         return gps
@@ -199,6 +214,7 @@ def throughput_sweep(
                 st = kern.scheduler_stats
                 extra = {"vm_steps": st.steps, "num_blocks": st.num_blocks,
                          "mean_occupancy": st.mean_occupancy,
+                         "mean_lane_occupancy": st.mean_lane_occupancy,
                          "num_devices": st.num_devices}
             t = best_of(lambda: kern(theta0, eps_arg, keys), repeats)
             row.append(record(arm, z_arm, active * gpl / t, **extra))
@@ -206,36 +222,52 @@ def throughput_sweep(
     return tab, records
 
 
-def parse_pc_variants(schedules: str, fuses: str, meshes: str = "none") -> tuple:
+def parse_pc_variants(schedules: str, fuses: str, meshes: str = "none",
+                      compacts: str = "none", kernels: str = "off") -> tuple:
     scheds = [s.strip() for s in schedules.split(",") if s.strip()]
     fz_map = {"on": True, "off": False, "true": True, "false": False}
-    fzs = []
-    for f in fuses.split(","):
-        f = f.strip().lower()
-        if f and f not in fz_map:
-            raise SystemExit(f"--fuse values must be on/off, got {f!r}")
-        if f:
-            fzs.append(fz_map[f])
-    ms = []
-    for m in meshes.split(","):
-        m = m.strip().lower()
-        if not m:
-            continue
-        if m in ("none", "0"):
-            ms.append(None)
-        elif m.isdigit():
-            ms.append(int(m))
-        else:
-            raise SystemExit(
-                f"--mesh values must be device counts or 'none', got {m!r}"
-            )
-    if not scheds or not fzs or not ms:
+
+    def parse_onoff(text: str, flag: str) -> list[bool]:
+        out = []
+        for f in text.split(","):
+            f = f.strip().lower()
+            if f and f not in fz_map:
+                raise SystemExit(f"{flag} values must be on/off, got {f!r}")
+            if f:
+                out.append(fz_map[f])
+        return out
+
+    def parse_none_or_int(text: str, flag: str) -> list:
+        out = []
+        for m in text.split(","):
+            m = m.strip().lower()
+            if not m:
+                continue
+            if m in ("none", "0"):
+                out.append(None)
+            elif m.isdigit():
+                out.append(int(m))
+            else:
+                raise SystemExit(
+                    f"{flag} values must be ints or 'none', got {m!r}"
+                )
+        return out
+
+    fzs = parse_onoff(fuses, "--fuse")
+    ms = parse_none_or_int(meshes, "--mesh")
+    ces = parse_none_or_int(compacts, "--compact-every")
+    uks = parse_onoff(kernels, "--use-kernel")
+    if not scheds or not fzs or not ms or not ces or not uks:
         raise SystemExit(
-            "--schedule, --fuse and --mesh must each name at least one "
-            "value (e.g. --schedule earliest,popular --fuse on,off "
-            "--mesh none,8)"
+            "--schedule, --fuse, --mesh, --compact-every and --use-kernel "
+            "must each name at least one value (e.g. --schedule "
+            "earliest,popular --fuse on,off --mesh none,8 "
+            "--compact-every none,1 --use-kernel off)"
         )
-    return tuple((s, f, m) for m in ms for f in fzs for s in scheds)
+    return tuple(
+        (s, f, m, c, k)
+        for k in uks for c in ces for m in ms for f in fzs for s in scheds
+    )
 
 
 def main(argv=None) -> int:
@@ -247,7 +279,7 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--schedule", default="earliest",
                     help="comma list of pc schedules "
-                         "(earliest, popular, sweep)")
+                         "(earliest, popular, sweep, lookahead)")
     ap.add_argument("--fuse", default="on",
                     help="comma list of on/off: superblock fusion settings "
                          "for the pc arm")
@@ -255,6 +287,14 @@ def main(argv=None) -> int:
                     help="comma list of lane-sharding device counts for the "
                          "pc arm ('none' = unsharded; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--compact-every", default="none",
+                    help="comma list of lane-compaction cadences for the pc "
+                         "arm ('none' = no compaction; k = permute lanes "
+                         "into pc-contiguous order every k dispatches)")
+    ap.add_argument("--use-kernel", default="off",
+                    help="comma list of on/off: route stack traffic through "
+                         "the Pallas masked-scatter kernels (composes with "
+                         "--mesh: one shard-local pallas_call per device)")
     ap.add_argument("--per-device-batch", action="store_true",
                     help="treat --batches as per-device: mesh arms scale "
                          "their total batch by the device count "
@@ -275,7 +315,8 @@ def main(argv=None) -> int:
         batches = [1, 4, 16, 64]
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
-    pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh)
+    pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh,
+                                    args.compact_every, args.use_kernel)
     tab, records = throughput_sweep(
         batches, repeats=args.repeats, pc_variants=pc_variants,
         per_device_batch=args.per_device_batch, verify=args.verify, **kw

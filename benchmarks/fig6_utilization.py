@@ -8,9 +8,10 @@ every member to the same call stack), while the PC VM batches gradients
 across trajectory AND recursion-depth boundaries — the paper's headline
 utilization win (~2x at 10 trajectories).
 
-The pc arm expands into one column per ``--schedule`` x ``--fuse``
-combination, so the occupancy effect of the VM scheduler and of
-superblock fusion is visible next to the local-static baseline.
+The pc arm expands into one column per ``--schedule`` x ``--fuse`` x
+``--mesh`` x ``--compact-every`` x ``--use-kernel`` combination, so the
+occupancy effect of the VM scheduler, superblock fusion and lane
+compaction is visible next to the local-static baseline.
 """
 from __future__ import annotations
 
@@ -41,9 +42,11 @@ def utilization_sweep(
         steps_per_leaf=steps_per_leaf,
     )
     solo = len(pc_variants) == 1
+    # Back-compat: 3-tuple variants mean no compaction / kernel.
+    pc_variants = tuple((*v, None, False)[:5] for v in pc_variants)
     pc_cols = [
-        pc_arm_name(sched, fz, mesh, solo=solo)
-        for sched, fz, mesh in pc_variants
+        pc_arm_name(sched, fz, mesh, ce, uk, solo=solo)
+        for sched, fz, mesh, ce, uk in pc_variants
     ]
     tab = Table(
         f"Fig 6 — batch utilization of gradient evals "
@@ -54,14 +57,15 @@ def utilization_sweep(
     # only the per-batch-size executors differ.
     pcs = [
         nuts.make_nuts_kernel(target, settings, backend="pc",
-                              schedule=sched, fuse=fz, mesh=mesh)
-        for sched, fz, mesh in pc_variants
+                              schedule=sched, fuse=fz, mesh=mesh,
+                              compact_every=ce, use_kernel=uk)
+        for sched, fz, mesh, ce, uk in pc_variants
     ]
     loc = nuts.make_nuts_kernel(target, settings, backend="local")
     for z in batch_sizes:
         theta0, eps_arg, keys = nuts.initial_state(target, z, eps=eps, seed=0)
         u_pcs = []
-        for pc, (_, _, mesh) in zip(pcs, pc_variants):
+        for pc, (_, _, mesh, _, _) in zip(pcs, pc_variants):
             ndev = getattr(mesh, "size", mesh) or 1
             if mesh is not None and z % ndev:
                 # Batch doesn't divide across this arm's mesh: nan the
@@ -84,13 +88,19 @@ def main(argv=None) -> int:
     ap.add_argument("--batches", default=None)
     ap.add_argument("--schedule", default="earliest",
                     help="comma list of pc schedules "
-                         "(earliest, popular, sweep)")
+                         "(earliest, popular, sweep, lookahead)")
     ap.add_argument("--fuse", default="on",
                     help="comma list of on/off: superblock fusion settings "
                          "for the pc arm")
     ap.add_argument("--mesh", default="none",
                     help="comma list of lane-sharding device counts for the "
                          "pc arm ('none' = unsharded)")
+    ap.add_argument("--compact-every", default="none",
+                    help="comma list of lane-compaction cadences for the pc "
+                         "arm ('none' = no compaction)")
+    ap.add_argument("--use-kernel", default="off",
+                    help="comma list of on/off: Pallas stack kernels for "
+                         "the pc arm")
     args = ap.parse_args(argv)
     if args.full:
         batches = [1, 2, 4, 8, 16, 32, 64]
@@ -100,7 +110,8 @@ def main(argv=None) -> int:
         kw = dict(dim=16, num_steps=6, max_tree_depth=7)
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
-    pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh)
+    pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh,
+                                    args.compact_every, args.use_kernel)
     print(utilization_sweep(batches, pc_variants=pc_variants, **kw).render())
     return 0
 

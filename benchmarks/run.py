@@ -31,6 +31,15 @@ def main(argv=None) -> int:
                     help="comma list of lane-sharding device counts for the "
                          "fig5/serve pc arms (e.g. 'none,8'; requires that "
                          "many visible devices)")
+    ap.add_argument("--schedule", default=None,
+                    help="comma list of pc schedules for fig5 (earliest, "
+                         "popular, sweep, lookahead); default earliest")
+    ap.add_argument("--compact-every", default=None,
+                    help="comma list of lane-compaction cadences for the "
+                         "fig5 pc arms (e.g. 'none,1')")
+    ap.add_argument("--use-kernel", default=None,
+                    help="comma list of on/off: Pallas stack kernels for "
+                         "the fig5 pc arms")
     ap.add_argument("--per-device-batch", action="store_true",
                     help="fig5: treat --batches as per-device (mesh arms "
                          "scale total batch by device count)")
@@ -62,6 +71,12 @@ def main(argv=None) -> int:
         # Measure the fused pc arm against the unfused/earliest seed
         # baseline in the same run, and persist the records.
         fig5_args = common + ["--fuse", "on,off"]
+        if args.schedule:
+            fig5_args += ["--schedule", args.schedule]
+        if args.compact_every:
+            fig5_args += ["--compact-every", args.compact_every]
+        if args.use_kernel:
+            fig5_args += ["--use-kernel", args.use_kernel]
         if args.mesh:
             fig5_args += ["--mesh", args.mesh]
             if args.per_device_batch:

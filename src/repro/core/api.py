@@ -55,6 +55,7 @@ class BatchedProgram:
         fuse: bool = False,  # legacy shim keeps the seed's unfused default
         mesh=None,  # lane sharding: None | device count | 1-D Mesh
         verify: bool = False,  # run the lowered-IR verifier between passes
+        compact_every: Optional[int] = None,  # lane compaction cadence
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -77,6 +78,7 @@ class BatchedProgram:
                     collect_block_stats=collect_stats,
                     schedule=schedule,
                     mesh=mesh,
+                    compact_every=compact_every,
                 ),
             )
         elif backend in ("local", "local_eager"):

@@ -444,20 +444,24 @@ class Stepper:
 
     def depth_exceeded(self, state: dict) -> jax.Array:
         """``[batch]`` bool: lanes whose stacks overflowed ``max_depth``."""
-        return state["depth_exceeded"]
+        return self.vm.lane_depth_exceeded(state)
 
     def outputs(self, state: dict) -> Any:
         """The output pytree view of a snapshot (no overflow check).
 
         Rows of lanes that have halted are final; rows of in-flight lanes
-        are whatever the program has written so far.
+        are whatever the program has written so far.  Always in the
+        caller's original lane order (compaction is inverted here).
         """
         iface = self._fn._iface
         main = self._ex.main
         tops = state["tops"]
         return jax.tree_util.tree_unflatten(
             iface.out_treedef,
-            [tops[ir.qualify(main, name)] for name in iface.out_leaves],
+            [
+                self.vm.unpermute(state, tops[ir.qualify(main, name)])
+                for name in iface.out_leaves
+            ],
         )
 
     def result(self, state: dict) -> Any:
@@ -472,14 +476,16 @@ class Stepper:
         """
         cfg = self.vm.config
         if cfg.on_fault == "raise":
+            # Lane order matters: the exceptions name offending lanes.
             _raise_if_overflowed(
-                jax.device_get(state["depth_exceeded"]),
+                jax.device_get(self.vm.lane_depth_exceeded(state)),
                 self.batch_size, cfg.max_depth,
                 self._ex.overflow_hint,
             )
             if cfg.detect_nonfinite or cfg.lane_step_budget is not None:
                 _raise_if_faulted(
-                    jax.device_get(state["fault_code"]), self.batch_size
+                    jax.device_get(self.vm.lane_fault(state)),
+                    self.batch_size,
                 )
         return self.outputs(state)
 
@@ -532,6 +538,7 @@ class AutobatchedFunction:
         on_fault: str = "raise",
         detect_nonfinite: bool = False,
         lane_step_budget: Optional[int] = None,
+        compact_every: Optional[int] = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -555,6 +562,7 @@ class AutobatchedFunction:
         self.on_fault = on_fault
         self.detect_nonfinite = detect_nonfinite
         self.lane_step_budget = lane_step_budget
+        self.compact_every = compact_every
         self.max_depth = max_depth  # None: use the static bound (pc)
         # Resolved lazily (resolving may initialize the jax backend, which
         # a decorator at module import time must not do).
@@ -568,7 +576,7 @@ class AutobatchedFunction:
             max_steps=max_steps, use_kernel=use_kernel,
             collect_block_stats=collect_stats, schedule=schedule, mesh=mesh,
             on_fault=on_fault, detect_nonfinite=detect_nonfinite,
-            lane_step_budget=lane_step_budget,
+            lane_step_budget=lane_step_budget, compact_every=compact_every,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
@@ -835,6 +843,7 @@ class AutobatchedFunction:
             self.on_fault,
             self.detect_nonfinite,
             self.lane_step_budget,
+            self.compact_every,
             self._mesh_key(),
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
@@ -1052,6 +1061,7 @@ def autobatch(
     on_fault: str = "raise",
     detect_nonfinite: bool = False,
     lane_step_budget: Optional[int] = None,
+    compact_every: Optional[int] = None,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -1089,8 +1099,19 @@ def autobatch(
       stack-explicit lowering, collapsing straight-line jump chains into
       single VM dispatch steps;
     * ``schedule`` picks the VM's next-block policy: ``"earliest"`` (paper
-      Algorithm 2), ``"popular"`` (occupancy argmax) or ``"sweep"`` (every
-      resident block once per loop iteration, no ``lax.switch``);
+      Algorithm 2), ``"popular"`` (occupancy argmax), ``"sweep"`` (every
+      resident block once per loop iteration, no ``lax.switch``) or
+      ``"lookahead"`` (occupancy argmax over each block plus its CFG
+      successors — re-converges divergent lanes faster than plain
+      ``"popular"``);
+    * ``compact_every=k`` permutes the lane axis every ``k`` VM dispatches
+      so lanes at the same program point occupy contiguous SIMD tiles
+      (occupancy-aware lane compaction).  Lane identity is tracked and
+      inverted on every output/Stepper/fault surface, so results are
+      bit-exact with ``compact_every=None`` (the default: no compaction);
+    * ``use_kernel=True`` routes stack pushes/peeks through the Pallas
+      ``stack_ops`` kernels (interpret mode off-TPU).  Composes with
+      ``mesh``: each device runs the kernel over its own lane slice;
     * ``mesh`` shards the batch-lane axis of every VM state array across
       devices (``None`` = single device, an int device count, or a 1-D
       ``jax.sharding.Mesh``), compiling the whole program as one SPMD
@@ -1141,6 +1162,7 @@ def autobatch(
             on_fault=on_fault,
             detect_nonfinite=detect_nonfinite,
             lane_step_budget=lane_step_budget,
+            compact_every=compact_every,
             registry=registry,
         )
     if registry is not None:
@@ -1162,7 +1184,7 @@ def autobatch(
         max_steps=max_steps, use_kernel=use_kernel, collect_stats=collect_stats,
         schedule=schedule, fuse=fuse, mesh=mesh, verify=verify, dce=dce,
         on_fault=on_fault, detect_nonfinite=detect_nonfinite,
-        lane_step_budget=lane_step_budget,
+        lane_step_budget=lane_step_budget, compact_every=compact_every,
     )
 
     program: Optional[ir.Program] = None

@@ -18,6 +18,11 @@ Schedules (``VMConfig.schedule``):
   mask, with no ``lax.switch`` at all.  Amortizes dispatch overhead for
   small (post-fusion) programs when members are spread across many blocks;
   one loop iteration can advance a member through several blocks.
+* ``"lookahead"`` — occupancy over the block's CFG successors: score each
+  resident block by ``2*count[b] + sum(count[s] for s in successors(b))``
+  and dispatch the argmax.  Prefers blocks whose completion *feeds* other
+  populated blocks, so divergent members re-converge sooner than under
+  plain ``"popular"``.  Ties break toward the lowest index.
 
 All schedules are bit-exact with each other and with the reference
 interpreter: every block body masks its updates to the members whose pc-top
@@ -93,6 +98,27 @@ batch-fatal one: the executor raises :class:`StackOverflow` /
 :class:`LaneFault` after the run, and an enabled detector halts the loop
 early instead of spinning to ``max_steps``.  ``inject`` clears the fault
 code and watchdog clock of refilled lanes.
+
+Occupancy-aware lane compaction (``VMConfig.compact_every``):
+
+Divergence scatters the members resident at a block across the lane axis,
+so a dispatch touches many SIMD tiles that are mostly masked out.  With
+``compact_every=k`` the loop body, every ``k`` dispatches, *permutes* the
+whole lane-major state with a stable sort on (liveness, pc-top) — lanes at
+the same program point become contiguous, and dead/quarantined lanes sink
+to the high end.  A ``lane_ids`` state vector records which original lane
+each row holds; every identity-bearing surface (``VMResult`` outputs and
+per-lane flags, ``lane_done``/``lane_fault``, ``Stepper`` views) applies
+the inverse permutation, and ``inject``/``park`` translate their
+original-order masks and inputs into row order — so compaction is
+invisible everywhere except throughput.  Because every schedule picks
+blocks from a lane-permutation-invariant histogram/min, the dispatch
+sequence, step counts and all outputs are bit-exact with the uncompacted
+run (property-tested).  ``mean_occupancy`` is measured per SIMD tile of
+:data:`OCCUPANCY_TILE` lanes: active lanes divided by the capacity of the
+tiles that held at least one active lane — the quantity compaction
+actually improves, and one that never charges fully-idle (parked,
+quarantined, retired) tiles.
 """
 from __future__ import annotations
 
@@ -104,7 +130,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import Mesh
 
 from . import ir
 
@@ -133,7 +159,32 @@ def _gather_top(stack: Array, ptr: Array) -> Array:
     return stack[jnp.clip(ptr, 0, stack.shape[0] - 1), jnp.arange(z)]
 
 
-SCHEDULES = ("earliest", "popular", "sweep")
+def _tile_capacity(mask: Array) -> Array:
+    """Lane capacity of the OCCUPANCY_TILE-wide tiles holding >=1 set lane.
+
+    ``mask``: [Z] bool -> i32 scalar.  Tiles are fixed windows over the
+    global lane index, so the value is device-placement-independent.  A
+    trailing partial tile contributes only its real width.
+    """
+    z = mask.shape[0]
+    t = OCCUPANCY_TILE
+    g = -(-z // t)  # ceil(z / t) tiles
+    pad = g * t - z
+    mp = jnp.pad(mask, (0, pad)) if pad else mask
+    occupied = jnp.any(mp.reshape(g, t), axis=1)
+    caps = jnp.full((g,), t, _I32)
+    if pad:
+        caps = caps.at[g - 1].set(t - pad)
+    return jnp.sum(jnp.where(occupied, caps, 0)).astype(_I32)
+
+
+SCHEDULES = ("earliest", "popular", "sweep", "lookahead")
+
+#: SIMD tile width (lanes) used by the occupancy metric: a dispatch's
+#: occupancy is active lanes / capacity of the tiles holding at least one
+#: active lane.  8 models vector-register granularity; the exact width only
+#: scales the metric, it does not change which schedule/compaction wins.
+OCCUPANCY_TILE = 8
 
 #: Fault policies (``VMConfig.on_fault``): ``"raise"`` keeps the historical
 #: batch-fatal behavior (the executor raises after the run); ``"quarantine"``
@@ -271,6 +322,13 @@ class VMConfig:
     # active for more than this many block dispatches without halting gets
     # FAULT_WATCHDOG.  None disables the check.
     lane_step_budget: Optional[int] = None
+    # Occupancy-aware lane compaction: every `compact_every` dispatches the
+    # loop body stably sorts the lane axis by (liveness, pc-top) so members
+    # at the same program point occupy contiguous SIMD tiles.  None (the
+    # default) disables compaction and skips all permutation bookkeeping.
+    # Bit-exact with the uncompacted run (outputs, steps, fault codes,
+    # per-lane ordering) for every schedule.
+    compact_every: Optional[int] = None
 
     def __post_init__(self):
         if self.on_fault not in ON_FAULT:
@@ -281,6 +339,11 @@ class VMConfig:
             raise ValueError(
                 "lane_step_budget must be >= 1 (or None to disable), got "
                 f"{self.lane_step_budget}"
+            )
+        if self.compact_every is not None and self.compact_every < 1:
+            raise ValueError(
+                "compact_every must be >= 1 (or None to disable), got "
+                f"{self.compact_every}"
             )
 
 
@@ -297,12 +360,22 @@ class SchedulerStats:
     fused: bool  # whether the program went through superblock fusion
     num_blocks: int
     steps: Optional[int]  # loop iterations (one sweep each for "sweep")
-    mean_occupancy: float  # active members per dispatch / batch_size
+    # Tile-based SIMD occupancy: active lanes per dispatch / capacity of
+    # the OCCUPANCY_TILE-lane tiles that held >= 1 active lane.  Excludes
+    # fully-idle tiles, so parked/quarantined/retired lanes never dilute
+    # it — and lane compaction (compact_every) genuinely raises it.
+    mean_occupancy: float
     # Superblock provenance: fused block index -> original block indices
     # (None when the program was never fused).
     fused_from: Optional[dict[int, tuple[int, ...]]]
     # Devices the lane axis was sharded over (1 = unsharded).
     num_devices: int = 1
+    # Legacy whole-batch metric: active members per dispatch / batch_size
+    # (counts every lane in the denominator, live or not).  Kept for
+    # trajectory comparisons with pre-compaction records.
+    mean_lane_occupancy: float = float("nan")
+    # The compaction cadence this run used (None = no compaction).
+    compact_every: Optional[int] = None
 
 
 @dataclass
@@ -355,18 +428,51 @@ class ProgramCounterVM:
                     f"the {n}-device mesh; pick a batch that is a multiple "
                     f"of {n}"
                 )
-            if config.use_kernel:
-                raise ValueError(
-                    "use_kernel=True (Pallas stack_ops) is not supported "
-                    "together with mesh sharding; the XLA scatter/gather "
-                    "path shards, the hand-written kernel does not"
+            # Lane-major layout rules live with the other sharding rules in
+            # launch/sharding.py (one source of truth with the tests).
+            from repro.launch.sharding import lane_shardings
+
+            (
+                self._lane_sharding,
+                self._stack_sharding,
+                self._replicated,
+            ) = lane_shardings(self.mesh)
+        # Pallas stack_ops binding.  Stack traffic is strictly per-lane, so
+        # under a mesh the kernel runs shard-locally (one pallas_call per
+        # device over its lane slice, via shard_map) — no cross-device
+        # traffic, and bit-exact with the XLA scatter/gather path.
+        self._kernel_push = self._kernel_peek = None
+        if config.use_kernel:
+            from repro.kernels.stack_ops import ops as _sk
+
+            if self.mesh is None:
+                self._kernel_push = _sk.masked_push
+                self._kernel_peek = _sk.masked_peek
+            else:
+                self._kernel_push, self._kernel_peek = _sk.shard_local(
+                    self.mesh
                 )
-            axis = self.mesh.axis_names[0]
-            self._lane_sharding = NamedSharding(self.mesh, PartitionSpec(axis))
-            self._stack_sharding = NamedSharding(
-                self.mesh, PartitionSpec(None, axis)
-            )
-            self._replicated = NamedSharding(self.mesh, PartitionSpec())
+        # "lookahead" scores blocks by occupancy over CFG successors; the
+        # [B, B] 0/1 successor matrix is a trace-time constant.
+        self._succ_matrix = None
+        if config.schedule == "lookahead":
+            succ = np.zeros((self.num_blocks, self.num_blocks), np.int32)
+            for i, blk in enumerate(lowered.blocks):
+                t = blk.term
+                if isinstance(t, ir.LJump):
+                    targets: tuple[int, ...] = (t.target,)
+                elif isinstance(t, ir.LBranch):
+                    targets = (t.true, t.false)
+                elif isinstance(t, ir.LPushJump):
+                    # One-step successor is the callee entry; the return
+                    # site is reached only after the callee finishes.
+                    targets = (t.target,)
+                else:  # LReturn: dynamic target (the buried return pc).
+                    targets = ()
+                for s in targets:
+                    if 0 <= s < self.num_blocks:
+                        succ[i, s] = 1
+            self._succ_matrix = jnp.asarray(succ)
         self._state_vars = [
             v
             for v in sorted(lowered.var_specs)
@@ -444,9 +550,18 @@ class ProgramCounterVM:
             # the watchdog's clock, and cheap per-lane progress telemetry.
             "lane_steps": jnp.zeros((z,), _I32),
         }
+        if cfg.compact_every is not None:
+            # Which ORIGINAL lane each row currently holds.  Compaction
+            # permutes rows; every identity-bearing surface inverts this
+            # to restore caller lane order.  Only materialized when
+            # compaction is on, so the uncompacted VM carries no overhead.
+            state["lane_ids"] = jnp.arange(z, dtype=_I32)
         if self.config.collect_block_stats:
             state["block_exec"] = jnp.zeros((self.num_blocks,), _I32)
             state["block_active"] = jnp.zeros((self.num_blocks,), _I32)
+            # Occupied-tile capacity accumulated over dispatches — the
+            # denominator of the tile-based mean_occupancy.
+            state["tile_acc"] = jnp.zeros((), _I32)
         return state
 
     def _shard_state(self, state: dict[str, Any]) -> dict[str, Any]:
@@ -475,9 +590,12 @@ class ProgramCounterVM:
         out["stacks"] = {v: wsc(x, stack) for v, x in state["stacks"].items()}
         out["ptrs"] = {v: wsc(x, lane) for v, x in state["ptrs"].items()}
         out["steps"] = wsc(state["steps"], repl)
+        if "lane_ids" in state:
+            out["lane_ids"] = wsc(state["lane_ids"], lane)
         if "block_exec" in state:
             out["block_exec"] = wsc(state["block_exec"], repl)
             out["block_active"] = wsc(state["block_active"], repl)
+            out["tile_acc"] = wsc(state["tile_acc"], repl)
         return out
 
     # ------------------------------------------------------------------
@@ -493,9 +611,9 @@ class ProgramCounterVM:
         detect_nonfinite = self.config.detect_nonfinite
         budget = self.config.lane_step_budget
         exit_idx = lowered.exit_index
-
-        if use_kernel:
-            from repro.kernels.stack_ops import ops as _sk
+        # Bound in __init__: plain Pallas wrappers, or shard-local (per
+        # device lane slice via shard_map) versions when a mesh is set.
+        kernel_push, kernel_peek = self._kernel_push, self._kernel_peek
 
         def run(state: dict[str, Any]) -> dict[str, Any]:
             mask = state["pc_top"] == bidx
@@ -568,7 +686,7 @@ class ProgramCounterVM:
                     depth_exceeded = jnp.logical_or(depth_exceeded, overflow)
                     set_fault(overflow, FAULT_STACK_OVERFLOW)
                     if use_kernel:
-                        stacks[op.var] = _sk.masked_push(
+                        stacks[op.var] = kernel_push(
                             stacks[op.var], ptrs[op.var], old_top, mask
                         )
                     else:
@@ -583,7 +701,7 @@ class ProgramCounterVM:
                 elif isinstance(op, ir.LPop):
                     new_ptr = ptrs[op.var] - imask
                     if use_kernel:
-                        restored = _sk.masked_peek(stacks[op.var], new_ptr)
+                        restored = kernel_peek(stacks[op.var], new_ptr)
                     else:
                         restored = _gather_top(stacks[op.var], new_ptr)
                     tops[op.var] = _masked(mask, restored, tops[op.var])
@@ -662,7 +780,8 @@ class ProgramCounterVM:
         exit_idx = self.lowered.exit_index
         pc_top = state["pc_top"]
         live = self._live_mask(state)
-        if self.config.schedule == "popular":
+        schedule = self.config.schedule
+        if schedule in ("popular", "lookahead"):
             # Occupancy argmax: the block where most live members reside.
             # The [num_blocks] histogram is replicated; the scatter-add over
             # lanes reduces to a per-block integer sum (associative, so the
@@ -672,7 +791,17 @@ class ProgramCounterVM:
                 .at[jnp.where(live, pc_top, self.num_blocks)]
                 .add(1, mode="drop")
             )
-            return jnp.argmax(counts).astype(_I32)
+            if schedule == "popular":
+                return jnp.argmax(counts).astype(_I32)
+            # Lookahead: own residents count double, plus the residents of
+            # the block's CFG successors — a populated block that feeds
+            # other populated blocks re-converges the batch fastest.  Only
+            # resident blocks are eligible (score -1 keeps empty blocks
+            # out); integer arithmetic on a replicated [B] vector, so the
+            # pick is deterministic and placement-independent.
+            score = 2 * counts + self._succ_matrix @ counts
+            score = jnp.where(counts > 0, score, -1)
+            return jnp.argmax(score).astype(_I32)
         # Earliest-block heuristic (Algorithm 1/2's block choice).
         return jnp.min(jnp.where(live, pc_top, exit_idx)).astype(_I32)
 
@@ -730,14 +859,16 @@ class ProgramCounterVM:
         def body_switch(state):
             i = self._pick_block(state)
             if collect:
-                active = jnp.sum(resident(state, i).astype(_I32))
+                m = resident(state, i)
+                active = jnp.sum(m.astype(_I32))
                 state = dict(state)
                 state["block_exec"] = state["block_exec"].at[i].add(1)
                 state["block_active"] = state["block_active"].at[i].add(active)
+                state["tile_acc"] = state["tile_acc"] + _tile_capacity(m)
             state = lax.switch(i, self._block_fns, state)
             state = dict(state)
             state["steps"] = state["steps"] + 1
-            return state
+            return self._maybe_compact(state)
 
         def body_sweep(state):
             # Run every resident block once, in index order, each under its
@@ -745,7 +876,8 @@ class ProgramCounterVM:
             # several (forward) blocks within one sweep.
             for b, fn in enumerate(self._block_fns):
                 if collect:
-                    active = jnp.sum(resident(state, b).astype(_I32))
+                    m = resident(state, b)
+                    active = jnp.sum(m.astype(_I32))
                     state = dict(state)
                     # Count a dispatch only when it had resident members,
                     # so utilization stays comparable across schedules.
@@ -755,12 +887,96 @@ class ProgramCounterVM:
                     state["block_active"] = (
                         state["block_active"].at[b].add(active)
                     )
+                    state["tile_acc"] = state["tile_acc"] + jnp.where(
+                        active > 0, _tile_capacity(m), 0
+                    )
                 state = fn(state)
             state = dict(state)
             state["steps"] = state["steps"] + 1
-            return state
+            return self._maybe_compact(state)
 
         return body_sweep if self.config.schedule == "sweep" else body_switch
+
+    # ------------------------------------------------------------------
+    # Occupancy-aware lane compaction
+    # ------------------------------------------------------------------
+
+    def _compact(self, state: dict[str, Any]) -> dict[str, Any]:
+        """Permute the lane axis so same-pc live lanes are contiguous.
+
+        Stable argsort on ``(liveness, pc_top)``: live lanes group by
+        program point in block order, exited/quarantined lanes sink to the
+        high end.  Every lane-major array moves by the same permutation
+        and ``lane_ids`` records it, so per-lane semantics are untouched —
+        only the SIMD tile layout changes.  Schedules read lane state
+        through permutation-invariant reductions (histogram / min / any),
+        so the dispatch sequence is bit-exact with the uncompacted run.
+        """
+        live = self._live_mask(state)
+        key = jnp.where(
+            live, state["pc_top"], jnp.asarray(self.num_blocks + 1, _I32)
+        )
+        perm = jnp.argsort(key, stable=True)
+
+        def take(x):  # [batch, ...] arrays
+            return jnp.take(x, perm, axis=0)
+
+        def take1(x):  # [depth, batch, ...] stacks
+            return jnp.take(x, perm, axis=1)
+
+        out = dict(state)
+        for k in (
+            "pc_top", "pc_ptr", "depth_exceeded",
+            "fault_code", "lane_steps", "lane_ids",
+        ):
+            out[k] = take(state[k])
+        out["pc_stack"] = take1(state["pc_stack"])
+        out["tops"] = {v: take(x) for v, x in state["tops"].items()}
+        out["stacks"] = {v: take1(x) for v, x in state["stacks"].items()}
+        out["ptrs"] = {v: take(x) for v, x in state["ptrs"].items()}
+        return self._shard_state(out)
+
+    def _maybe_compact(self, state: dict[str, Any]) -> dict[str, Any]:
+        """Compaction hook at the end of every loop body iteration."""
+        k = self.config.compact_every
+        if k is None:
+            return state
+        if k == 1:
+            return self._compact(state)
+        # ``steps`` was just incremented, so the first compaction lands
+        # after dispatch k — a traced-counter condition, shared by the
+        # single-shot and segmented loops (steps is global), so segment
+        # boundaries never change where compaction happens.
+        return lax.cond(
+            state["steps"] % k == 0,
+            self._compact,
+            lambda s: self._shard_state(dict(s)),
+            state,
+        )
+
+    def _lane_restore(self, state: dict[str, Any]) -> Optional[Array]:
+        """Inverse lane permutation (row -> original order), or None when
+        compaction is off and rows already are in caller order."""
+        if self.config.compact_every is None:
+            return None
+        return jnp.argsort(state["lane_ids"])
+
+    def unpermute(self, state: dict[str, Any], x: Array) -> Array:
+        """View a row-order ``[batch, ...]`` array in original lane order.
+
+        Identity when compaction is off.  Every public per-lane surface
+        (results, halt/fault flags, Stepper views) goes through this, so
+        callers never observe the compaction permutation.
+        """
+        inv = self._lane_restore(state)
+        return x if inv is None else jnp.take(x, inv, axis=0)
+
+    def _lane_select(self, state: dict[str, Any], x: Array) -> Array:
+        """Translate an original-lane-order ``[batch, ...]`` array (an
+        inject/park mask or fresh inputs) into current row order."""
+        if self.config.compact_every is None:
+            return x
+        return jnp.take(x, state["lane_ids"], axis=0)
 
     def _loop(self, state: dict[str, Any]) -> dict[str, Any]:
         return lax.while_loop(self._liveness_cond, self._make_body(), state)
@@ -829,16 +1045,25 @@ class ProgramCounterVM:
         return self._jitted_segment(state, jnp.asarray(num_steps, _I32))
 
     def lane_done(self, state: dict[str, Any]) -> Array:
-        """Per-lane halt flags: ``[batch]`` bool, True once a lane exited."""
-        return state["pc_top"] >= self.lowered.exit_index
+        """Per-lane halt flags: ``[batch]`` bool, True once a lane exited.
+
+        Like every per-lane surface, reported in original (caller) lane
+        order regardless of ``compact_every``."""
+        return self.unpermute(
+            state, state["pc_top"] >= self.lowered.exit_index
+        )
 
     def lane_fault(self, state: dict[str, Any]) -> Array:
         """Per-lane fault codes: ``[batch]`` i32 (see :data:`FAULT_NAMES`)."""
-        return state["fault_code"]
+        return self.unpermute(state, state["fault_code"])
 
     def lane_faulted(self, state: dict[str, Any]) -> Array:
         """Per-lane fault flags: ``[batch]`` bool, True once a lane faulted."""
-        return state["fault_code"] != FAULT_OK
+        return self.unpermute(state, state["fault_code"] != FAULT_OK)
+
+    def lane_depth_exceeded(self, state: dict[str, Any]) -> Array:
+        """Per-lane overflow flags, original lane order: ``[batch]`` bool."""
+        return self.unpermute(state, state["depth_exceeded"])
 
     def park(self, state: dict[str, Any], mask: Array) -> dict[str, Any]:
         """Force masked lanes to the exit block (idle, excluded from
@@ -873,6 +1098,7 @@ class ProgramCounterVM:
         return self._jitted_inject(state, jnp.asarray(mask, jnp.bool_), fresh)
 
     def _park(self, state: dict[str, Any], mask: Array) -> dict[str, Any]:
+        mask = self._lane_select(state, mask)  # caller order -> row order
         out = dict(state)
         out["pc_top"] = jnp.where(
             mask, jnp.asarray(self.lowered.exit_index, _I32), state["pc_top"]
@@ -886,6 +1112,9 @@ class ProgramCounterVM:
         fresh: dict[str, Array],
     ) -> dict[str, Any]:
         lp = self.lowered
+        # Callers address lanes by original identity; rows may be permuted.
+        mask = self._lane_select(state, mask)
+        fresh = {p: self._lane_select(state, x) for p, x in fresh.items()}
 
         def col_masked(new, old):
             # [depth, batch, ...] arrays: mask selects whole lane columns.
@@ -931,7 +1160,14 @@ class ProgramCounterVM:
 
     def _result(self, state) -> VMResult:
         lp = self.lowered
-        outputs = {o: state["tops"][o] for o in lp.main_outputs}
+        # Restore caller lane order on every per-lane array (identity when
+        # compaction is off) — compaction must be invisible in results.
+        inv = self._lane_restore(state)
+
+        def restore(x):
+            return x if (x is None or inv is None) else jnp.take(x, inv, 0)
+
+        outputs = {o: restore(state["tops"][o]) for o in lp.main_outputs}
         done = state["pc_top"] >= lp.exit_index
         if self.config.on_fault == "quarantine":
             # A quarantined lane will never reach the exit block; the run
@@ -942,6 +1178,7 @@ class ProgramCounterVM:
         block_active = state.get("block_active")
         tag_stats: dict[str, tuple[int, int]] = {}
         mean_occ = float("nan")
+        mean_lane_occ = float("nan")
         steps = None
         if block_exec is not None:
             be = jax.device_get(block_exec)
@@ -951,10 +1188,16 @@ class ProgramCounterVM:
                 active = sum(int(ba[b]) * m for b, m in entries)
                 tag_stats[tag] = (execs, active)
             dispatches = int(be.sum())
+            tile_cap = int(jax.device_get(state["tile_acc"]))
             if dispatches:
-                mean_occ = float(ba.sum()) / (
+                # Tile-based SIMD occupancy: actives / occupied-tile
+                # capacity (see OCCUPANCY_TILE).  The legacy whole-batch
+                # ratio rides along for trajectory comparisons.
+                mean_lane_occ = float(ba.sum()) / (
                     dispatches * self.config.batch_size
                 )
+            if tile_cap:
+                mean_occ = float(ba.sum()) / tile_cap
             steps = int(jax.device_get(state["steps"]))
         sched = SchedulerStats(
             schedule=self.config.schedule,
@@ -964,6 +1207,8 @@ class ProgramCounterVM:
             mean_occupancy=mean_occ,
             fused_from=lp.fused_from,
             num_devices=self.mesh.size if self.mesh is not None else 1,
+            mean_lane_occupancy=mean_lane_occ,
+            compact_every=self.config.compact_every,
         )
         return VMResult(
             outputs=outputs,
@@ -972,10 +1217,10 @@ class ProgramCounterVM:
             block_exec=block_exec,
             block_active=block_active,
             tag_stats=tag_stats,
-            depth_exceeded=state.get("depth_exceeded"),
+            depth_exceeded=restore(state.get("depth_exceeded")),
             sched=sched,
-            fault_code=state.get("fault_code"),
-            lane_steps=state.get("lane_steps"),
+            fault_code=restore(state.get("fault_code")),
+            lane_steps=restore(state.get("lane_steps")),
         )
 
     # ------------------------------------------------------------------

@@ -25,6 +25,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed TPUCompilerParams -> CompilerParams; accept either so the
+# kernels import (and run in interpret mode) across the supported range.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                           getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   bq: int, bk: int, nk: int, scale: float, causal: bool):
@@ -116,7 +121,7 @@ def flash_attention(
             pltpu.VMEM((bq, 128), jnp.float32),  # running sum
             pltpu.VMEM((bq, dh), jnp.float32),  # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -5,11 +5,20 @@ On CPU we *validate* the Pallas kernels in interpret mode; the VM's
 default (`use_kernel=False`) uses the jnp reference, which XLA compiles
 to the same scatter/gather it would on TPU.  `use_kernel=True` routes
 through `pallas_call` (interpret on CPU, compiled on TPU).
+
+Under lane sharding (`VMConfig.mesh`) stack traffic stays strictly
+per-lane, so :func:`shard_local` wraps the same wrappers in `shard_map`:
+each device runs one `pallas_call` over its own lane slice — no
+cross-device traffic, bit-exact with the unsharded kernel and with the
+XLA scatter/gather path.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from . import kernel, ref
 
@@ -42,3 +51,36 @@ def masked_peek(stack: jax.Array, ptr: jax.Array) -> jax.Array:
     s2, feat = _flatten_features(stack, 2)
     out = kernel.masked_peek(s2, ptr, interpret=not _is_tpu())
     return out.reshape((z,) + stack.shape[2:])
+
+
+@functools.lru_cache(maxsize=None)
+def shard_local(mesh):
+    """Shard-local ``(masked_push, masked_peek)`` for a 1-D lane mesh.
+
+    Each returned callable has the same signature/semantics as the
+    module-level wrapper it wraps, but runs one kernel per device over
+    that device's lane slice: stacks are ``[depth, lanes, ...]`` with the
+    lane axis sharded, pointers/masks/values shard their leading lane
+    axis, and feature dims stay unpartitioned.  ``check_rep=False``
+    because Pallas calls don't participate in shard_map's replication
+    inference.  Cached per mesh so VM instances and tests share the
+    wrapped callables (and their jit caches).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axis = mesh.axis_names[0]
+    push = shard_map(
+        masked_push,
+        mesh=mesh,
+        in_specs=(P(None, axis), P(axis), P(axis), P(axis)),
+        out_specs=P(None, axis),
+        check_rep=False,
+    )
+    peek = shard_map(
+        masked_peek,
+        mesh=mesh,
+        in_specs=(P(None, axis), P(axis)),
+        out_specs=P(axis),
+        check_rep=False,
+    )
+    return push, peek

@@ -224,3 +224,33 @@ def cache_shardings(cache_shape: PyTree, batch_size: int, mesh: Mesh
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Autobatching-VM lane state
+# ---------------------------------------------------------------------------
+
+
+def lane_shardings(
+    mesh: Mesh, axis: Optional[str] = None
+) -> tuple[NamedSharding, NamedSharding, NamedSharding]:
+    """``(lane, stack, replicated)`` NamedShardings for pc-VM lane state.
+
+    The VM's state is lane-major: ``[batch, ...]`` tops/pointers/masks
+    shard their leading axis, ``[depth, batch, ...]`` stacks shard axis 1
+    (depth is addressed per lane, never across lanes), and scalars /
+    ``[num_blocks]`` counters replicate.  One source of truth shared by
+    ``repro.core.pc_vm`` and the sharded stack-kernel tests, so a layout
+    change cannot silently diverge between them.
+    """
+    if len(mesh.axis_names) != 1 and axis is None:
+        raise ValueError(
+            "lane_shardings needs a 1-D mesh or an explicit axis; got axes "
+            f"{mesh.axis_names}"
+        )
+    axis = axis if axis is not None else mesh.axis_names[0]
+    return (
+        NamedSharding(mesh, P(axis)),
+        NamedSharding(mesh, P(None, axis)),
+        NamedSharding(mesh, P()),
+    )

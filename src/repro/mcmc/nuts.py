@@ -323,6 +323,7 @@ def make_nuts_kernel(
     fuse: bool = True,
     mesh=None,
     verify: bool = False,
+    compact_every: Optional[int] = None,
 ) -> batching.AutobatchedFunction:
     """The public NUTS entry point, on the decorator-first pytree API.
 
@@ -345,6 +346,9 @@ def make_nuts_kernel(
     across devices — chains are embarrassingly parallel, so the only
     cross-device traffic is the VM's scalar dispatch reductions, and the
     sampled chains are bit-identical to the unsharded run.
+    ``compact_every=k`` turns on occupancy-aware lane compaction every
+    ``k`` VM dispatches — tree-depth divergence between chains is exactly
+    the fragmentation compaction recovers; chains stay bit-identical.
     """
     program = build_nuts_program(target, settings)
     vec = spec((target.dim,), jnp.float32)
@@ -361,6 +365,7 @@ def make_nuts_kernel(
         fuse=fuse,
         mesh=mesh,
         verify=verify,
+        compact_every=compact_every,
     )
 
 

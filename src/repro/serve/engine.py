@@ -82,6 +82,15 @@ class EngineConfig:
     # admission/retire checks.  Smaller = lower admission latency, more
     # host round-trips; larger = the opposite.
     segment_steps: int = 64
+    # Occupancy-aware lane compaction cadence (pc backend; see
+    # pc_vm.VMConfig.compact_every).  Requests keep their lane identity on
+    # every engine surface — retire/inject/outputs invert the permutation
+    # — so serving semantics are unchanged; only SIMD occupancy improves.
+    compact_every: Optional[int] = None
+    # Route VM stack traffic through the Pallas stack_ops kernels
+    # (pc backend; composes with mesh — each device runs the kernel over
+    # its own lane slice).
+    use_kernel: bool = False
     # ---- fault containment & resilience (serve/generate) ----
     # VM fault policy (see pc_vm.VMConfig.on_fault).  The serving default
     # is "quarantine": one faulted request must never take down the other
@@ -221,6 +230,8 @@ class GenerationEngine:
                 on_fault=cfg.on_fault,
                 detect_nonfinite=cfg.detect_nonfinite,
                 lane_step_budget=cfg.lane_step_budget,
+                compact_every=cfg.compact_every,
+                use_kernel=cfg.use_kernel,
             )
             if cfg.backend == "pc"
             else {}
@@ -472,6 +483,8 @@ class GenerationEngine:
                 on_fault=self.cfg.on_fault,
                 detect_nonfinite=self.cfg.detect_nonfinite,
                 lane_step_budget=self.cfg.lane_step_budget,
+                compact_every=self.cfg.compact_every,
+                use_kernel=self.cfg.use_kernel,
             )
         return self._serve_batched
 

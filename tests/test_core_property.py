@@ -264,6 +264,114 @@ def test_segmented_matches_single_shot_matrix(seed, seg):
                 )
 
 
+@pytest.mark.parametrize(
+    "schedule,fuse",
+    [
+        ("earliest", True),
+        ("popular", True),
+        ("sweep", True),
+        ("lookahead", True),
+        ("popular", False),
+    ],
+)
+def test_compaction_kernel_matrix_matches_uncompacted(schedule, fuse):
+    """The ISSUE 8 tentpole contract: ``compact_every`` x ``use_kernel`` x
+    mesh extends the schedule x fuse x mesh matrix bit-exactly.  For every
+    cell, outputs, per-lane ordering AND the VM step count must be
+    identical to the uncompacted, kernel-free, unsharded run — compaction
+    permutes rows and tracks ``lane_ids``, schedules only ever observe
+    permutation-invariant reductions, and the Pallas stack kernels run
+    shard-locally under a mesh."""
+    import jax
+
+    rng = np.random.default_rng(11)
+    prog = _Gen(rng).build()
+    pairs = [(int(rng.integers(0, 5)), int(rng.integers(-50, 51)))
+             for _ in range(8)]
+    n = np.array([i[0] for i in pairs], np.int32)
+    x = np.array([i[1] for i in pairs], np.int32)
+    base_fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule=schedule, fuse=fuse,
+    )
+    base = np.asarray(base_fn(n, x)["out"])
+    base_steps = int(base_fn.last_result.steps)
+    meshes = [None] + ([2] if jax.device_count() >= 2 else [])
+    # use_kernel=True cells are pallas-interpret on CPU (slow), so they
+    # run a trimmed compact axis; the pure-compaction cells run all of it.
+    cells = [(False, 1), (False, 7), (True, None), (True, 1)]
+    for mesh in meshes:
+        for use_kernel, ce in cells:
+            fn = batching.autobatch(
+                prog, backend="pc", max_depth=64, max_steps=200_000,
+                schedule=schedule, fuse=fuse, mesh=mesh,
+                use_kernel=use_kernel, compact_every=ce,
+            )
+            tag = (f"pc[{schedule},fuse={fuse},mesh={mesh},"
+                   f"kernel={use_kernel},compact={ce}]")
+            np.testing.assert_array_equal(
+                np.asarray(fn(n, x)["out"]), base,
+                err_msg=f"{tag} != uncompacted baseline",
+            )
+            assert int(fn.last_result.steps) == base_steps, (
+                f"{tag}: step count {int(fn.last_result.steps)} != "
+                f"baseline {base_steps} — the dispatch sequence drifted"
+            )
+
+
+@pytest.mark.parametrize("seg", [3, 16])
+def test_compaction_segmented_quarantine_matches_uncompacted(seg):
+    """Compaction under the full serving stack of knobs: segmented
+    (Stepper) execution, ``on_fault="quarantine"`` with real overflow
+    faults, mesh sharding and the Pallas kernel.  Outputs, per-lane fault
+    codes, halt flags and step counts must all match the uncompacted
+    single-shot run in the caller's lane order."""
+    import jax
+
+    prog = _deep_program()
+    # depths 9/0/1/8 against max_depth=4: lanes 0 and 3 overflow-fault,
+    # lanes 1 and 2 stay healthy.
+    n = np.array([9, 0, 1, 8], np.int32)
+    base_fn = batching.autobatch(
+        prog, backend="pc", max_depth=4, on_fault="quarantine",
+    )
+    base = np.asarray(base_fn(n)["out"])
+    base_res = base_fn.last_result
+    base_steps = int(base_res.steps)
+    base_faults = np.asarray(base_res.fault_code)
+    np.testing.assert_array_equal(base_faults != 0, [True, False, False, True])
+    base_st = base_fn.stepper(n)
+    base_state = base_st.init()
+    while not base_st.done(base_state):
+        base_state = base_st.step(base_state, seg)
+    base_done = np.asarray(base_st.lane_done(base_state))
+    meshes = [None] + ([2] if jax.device_count() >= 2 else [])
+    for mesh in meshes:
+        for use_kernel in (False, True):
+            fn = batching.autobatch(
+                prog, backend="pc", max_depth=4, on_fault="quarantine",
+                mesh=mesh, use_kernel=use_kernel, compact_every=1,
+            )
+            st_ = fn.stepper(n)
+            state = st_.init()
+            while not st_.done(state):
+                state = st_.step(state, seg)
+            tag = f"pc[quarantine,mesh={mesh},kernel={use_kernel},seg={seg}]"
+            np.testing.assert_array_equal(
+                np.asarray(st_.result(state)["out"]), base,
+                err_msg=f"{tag} outputs != uncompacted",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(st_.fault_code(state)), base_faults,
+                err_msg=f"{tag} fault codes != uncompacted",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(st_.lane_done(state)), base_done,
+                err_msg=f"{tag} halt flags in wrong lane order",
+            )
+            assert st_.steps(state) == base_steps, tag
+
+
 def _deep_program():
     """Unbounded-depth recursion: overflows any small max_depth for n>=d."""
     pb = frontend.ProgramBuilder()

@@ -112,12 +112,37 @@ class TestShardedVM:
                 low, pc_vm.VMConfig(batch_size=3, mesh=2)
             )
 
-    def test_use_kernel_with_mesh_rejected(self):
+    @multi_device
+    def test_use_kernel_with_mesh_accepted_and_bit_exact(self):
+        """use_kernel + mesh now composes (ISSUE 8): the stack kernels run
+        shard-locally via ``stack_ops.shard_local``, one pallas_call per
+        device slice, and the result must be bit-identical to both the
+        plain sharded VM and the unsharded interpreter."""
         low = lowering.lower(build_fib())
-        with pytest.raises(ValueError, match="use_kernel"):
-            pc_vm.ProgramCounterVM(
-                low, pc_vm.VMConfig(batch_size=4, mesh=2, use_kernel=True)
+        z = 8
+        n, inputs = _fib_inputs(z)
+        base = pc_vm.ProgramCounterVM(
+            low, pc_vm.VMConfig(batch_size=z, max_depth=24)
+        ).run(inputs)
+        for mesh in (2, jax.device_count()):
+            vm = pc_vm.ProgramCounterVM(
+                low,
+                pc_vm.VMConfig(batch_size=z, max_depth=24, mesh=mesh,
+                               use_kernel=True),
             )
+            res = vm.run(inputs)
+            (out,) = res.outputs.values()
+            np.testing.assert_array_equal(np.asarray(out), FIB[n])
+            for k in base.outputs:
+                np.testing.assert_array_equal(
+                    np.asarray(res.outputs[k]),
+                    np.asarray(base.outputs[k]),
+                    err_msg=f"mesh={mesh} use_kernel=True",
+                )
+            assert int(res.steps) == int(base.steps)
+            # still lane-sharded on the way out — the kernel path must not
+            # have collapsed the layout
+            assert pc_vm.LANE_AXIS in str(out.sharding.spec)
 
     @multi_device
     def test_staged_donation_path_matches_run(self):

@@ -1,0 +1,151 @@
+"""Scheduler-oracle differential tests (ISSUE 8 satellite 1).
+
+A pure-NumPy reference scheduler replays the VM's block choices from
+observed snapshots: drive a Stepper one loop iteration at a time, read
+``pc_top`` *before* the step, predict the dispatch with the oracle, and
+check the prediction against which ``block_exec`` counter actually
+incremented.  This pins the traced ``_pick_block`` (min / histogram
+argmax / lookahead scoring, including its tie-breaks) to an independent
+executable spec — a schedule regression shows up as a divergent dispatch
+sequence, not just a slower benchmark.
+
+The oracle rebuilds the lookahead successor matrix from the lowered
+terminators itself (LJump -> target, LBranch -> both arms, LPushJump ->
+callee entry only, LReturn -> none), so an IR-side change to the CFG
+feeds both sides independently.
+
+Compaction (``compact_every=1``) runs the same oracle unchanged: every
+schedule reduces a lane-permutation-invariant statistic, so the pick
+sequence must be identical however rows are shuffled.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import batching, ir
+from tests.test_core_property import _Gen
+
+MAX_ITERS = 400
+MIN_DISPATCHES = 20  # a trace shorter than this isn't exercising much
+
+
+def _succ_matrix(lowered) -> np.ndarray:
+    """[B, B] 0/1 CFG successor matrix, rebuilt independently of pc_vm."""
+    nb = len(lowered.blocks)
+    succ = np.zeros((nb, nb), np.int64)
+    for i, blk in enumerate(lowered.blocks):
+        t = blk.term
+        if isinstance(t, ir.LJump):
+            targets = (t.target,)
+        elif isinstance(t, ir.LBranch):
+            targets = (t.true, t.false)
+        elif isinstance(t, ir.LPushJump):
+            targets = (t.target,)
+        else:
+            targets = ()
+        for s in targets:
+            if 0 <= s < nb:
+                succ[i, s] = 1
+    return succ
+
+
+def _oracle_pick(pc: np.ndarray, exit_idx: int, num_blocks: int,
+                 schedule: str, succ: np.ndarray) -> int:
+    live = pc < exit_idx
+    if schedule == "earliest":
+        return int(np.min(np.where(live, pc, exit_idx)))
+    counts = np.bincount(pc[live], minlength=num_blocks)[:num_blocks]
+    if schedule == "popular":
+        return int(np.argmax(counts))
+    assert schedule == "lookahead"
+    score = 2 * counts + succ @ counts
+    score = np.where(counts > 0, score, -1)
+    return int(np.argmax(score))
+
+
+def _seeded_inputs(seed: int, z: int = 8):
+    rng = np.random.default_rng(seed)
+    prog = _Gen(rng).build()
+    n = rng.integers(0, 5, size=z).astype(np.int32)
+    x = rng.integers(-50, 51, size=z).astype(np.int32)
+    return prog, n, x
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("schedule", ["earliest", "popular", "lookahead"])
+@pytest.mark.parametrize("compact_every", [None, 1])
+def test_scheduled_dispatches_match_numpy_oracle(seed, schedule,
+                                                 compact_every):
+    prog, n, x = _seeded_inputs(seed)
+    fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule=schedule, compact_every=compact_every,
+    )
+    st = fn.stepper(n, x)
+    state = st.init()
+    vm = st.vm
+    exit_idx = vm.lowered.exit_index
+    nb = vm.num_blocks
+    succ = _succ_matrix(vm.lowered)
+    dispatches = 0
+    for _ in range(MAX_ITERS):
+        if st.done(state):
+            break
+        pc = np.asarray(jax.device_get(state["pc_top"]))
+        before = np.asarray(jax.device_get(state["block_exec"]))
+        want = _oracle_pick(pc, exit_idx, nb, schedule, succ)
+        state = st.step(state, 1)
+        delta = np.asarray(jax.device_get(state["block_exec"])) - before
+        assert delta.sum() == 1, (
+            f"one scheduled dispatch must run exactly one block; got {delta}"
+        )
+        got = int(np.argmax(delta))
+        assert got == want, (
+            f"dispatch {dispatches}: VM picked block {got}, "
+            f"oracle says {want} (schedule={schedule}, "
+            f"compact_every={compact_every}, pc histogram="
+            f"{np.bincount(pc[pc < exit_idx], minlength=nb)[:nb]})"
+        )
+        dispatches += 1
+    assert st.done(state), "trace did not finish within MAX_ITERS"
+    assert dispatches >= MIN_DISPATCHES
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("compact_every", [None, 1])
+def test_sweep_dispatches_cover_residents(seed, compact_every):
+    """One sweep iteration counts every block that was resident at sweep
+    start exactly once (lanes parked in block b cannot move until b's
+    turn), and only ever increments a counter by 0 or 1.  Blocks beyond
+    the resident set may legitimately count too — lanes that advance
+    mid-sweep into a later block are swept the same iteration."""
+    prog, n, x = _seeded_inputs(seed)
+    fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule="sweep", compact_every=compact_every,
+    )
+    st = fn.stepper(n, x)
+    state = st.init()
+    vm = st.vm
+    exit_idx = vm.lowered.exit_index
+    nb = vm.num_blocks
+    sweeps = 0
+    for _ in range(MAX_ITERS):
+        if st.done(state):
+            break
+        pc = np.asarray(jax.device_get(state["pc_top"]))
+        before = np.asarray(jax.device_get(state["block_exec"]))
+        resident = np.zeros(nb, bool)
+        resident[pc[pc < exit_idx]] = True
+        state = st.step(state, 1)
+        delta = np.asarray(jax.device_get(state["block_exec"])) - before
+        assert set(np.unique(delta)) <= {0, 1}
+        assert np.all(delta[resident] == 1), (
+            f"sweep {sweeps} skipped a resident block: residents="
+            f"{np.flatnonzero(resident)}, counted={np.flatnonzero(delta)}"
+        )
+        sweeps += 1
+    assert st.done(state), "trace did not finish within MAX_ITERS"
+    assert sweeps >= 2
