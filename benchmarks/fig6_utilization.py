@@ -73,12 +73,30 @@ def utilization_sweep(
                 u_pcs.append(float("nan"))
                 continue
             pc(theta0, eps_arg, keys)
-            u_pcs.append(pc.utilization["grad"])
+            u_pcs.append(_grad_util(pc))
         loc(theta0, eps_arg, keys)
-        u_loc = loc.utilization["grad"]
+        u_loc = _grad_util(loc)
         tab.add(z, *u_pcs, u_loc,
                 u_pcs[0] / u_loc if u_loc else float("nan"))
     return tab
+
+
+def _grad_util(kernel) -> float:
+    """The kernel's gradient-tag utilization, failing loudly when absent.
+
+    ``utilization`` is ``{}``/missing the tag when the kernel ran with
+    ``collect_stats=False`` — the old ``["grad"]`` lookup would KeyError
+    and a ``.get`` default would silently plot nan as data; this figure
+    IS the utilization measurement, so demand the stats instead.
+    """
+    u = kernel.utilization.get("grad")
+    if u is None:
+        raise RuntimeError(
+            "fig6 needs block statistics: build the NUTS kernel with "
+            "collect_stats=True (the default) so utilization['grad'] "
+            "is recorded"
+        )
+    return u
 
 
 def main(argv=None) -> int:

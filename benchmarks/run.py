@@ -15,9 +15,15 @@ import argparse
 import os
 import sys
 import time
+from pathlib import Path
 
 from . import fig5_throughput, fig6_utilization, roofline, serve_bench
 from .common import validate_bench_json
+
+#: Default BENCH_*.json artifacts land at the repo root regardless of
+#: the invoking cwd, so the perf-trajectory records tracked across PRs
+#: always live in one place.
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def main(argv=None) -> int:
@@ -49,12 +55,14 @@ def main(argv=None) -> int:
                          "Poisson continuous batching")
     ap.add_argument("--serve-requests", type=int, default=16,
                     help="open-loop serve: requests in the arrival stream")
-    ap.add_argument("--json-out", default="BENCH_fig5.json",
+    ap.add_argument("--json-out", default=str(REPO_ROOT / "BENCH_fig5.json"),
                     help="path for the machine-readable fig5 results "
-                         "(tracked across PRs); empty string disables")
-    ap.add_argument("--serve-json-out", default="BENCH_serve.json",
-                    help="path for the machine-readable serve results; "
-                         "empty string disables")
+                         "(tracked across PRs; default: repo root); empty "
+                         "string disables")
+    ap.add_argument("--serve-json-out",
+                    default=str(REPO_ROOT / "BENCH_serve.json"),
+                    help="path for the machine-readable serve results "
+                         "(default: repo root); empty string disables")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 

@@ -23,7 +23,9 @@ healthy requests' tokens are bit-exact with a chaos-free serve.
 
 ``--seed`` makes the Poisson stream reproducible (threaded into the JSON
 record).  ``--json PATH`` writes machine-readable records (strict JSON —
-NaN is serialized as ``null``).
+NaN is serialized as ``null``).  ``--metrics-out PATH`` shares one
+``obs.metrics`` registry across every engine in the sweep and dumps it in
+Prometheus text exposition format when the sweep finishes.
 """
 from __future__ import annotations
 
@@ -36,6 +38,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import get_model
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.engine import EngineConfig, GenerationEngine, Request
 
 from .common import Table, write_json
@@ -51,14 +54,14 @@ def _load_model():
 
 def _engine(cfg, model, params, lanes: int, *, max_new: int,
             prompt_len: int, requests_per_lane: int, mesh,
-            segment_steps: int = 64, **fault_knobs):
+            segment_steps: int = 64, metrics=None, **fault_knobs):
     ecfg = EngineConfig(
         lanes=lanes, max_context=prompt_len + max_new + 2,
         max_prompt_len=prompt_len, max_new_tokens=max_new,
         requests_per_lane=requests_per_lane, eos_id=0, backend="pc",
         mesh=mesh, segment_steps=segment_steps, **fault_knobs,
     )
-    return GenerationEngine(model, params, ecfg)
+    return GenerationEngine(model, params, ecfg, metrics=metrics)
 
 
 def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
@@ -99,12 +102,18 @@ def serve_sweep(lane_counts: list[int], *, max_new: int = 16,
         t0 = time.perf_counter()
         ref = eng.reference_generate(prompts, plens)
         t_seq = time.perf_counter() - t0
+        # utilization is None when the engine ran without block stats and
+        # can be nan in degenerate runs; show nan in the table but record
+        # an explicit null in the JSON (never a bare NaN token).
+        util = res["utilization"]
+        util_cell = float("nan") if util is None else util
         tab.add(lanes, mesh or 1, n_tok / t_vm, n_tok / t_seq, t_seq / t_vm,
-                round(res["utilization"] or 0.0, 3))
+                round(util_cell, 3) if np.isfinite(util_cell) else util_cell)
         records.append({
             "mode": "closed", "lanes": lanes, "mesh": mesh or 1,
             "tok_s": n_tok / t_vm, "seq_tok_s": n_tok / t_seq,
-            "utilization": res["utilization"],
+            "utilization": (util if util is not None
+                            and np.isfinite(util) else None),
         })
     return tab, records
 
@@ -129,7 +138,8 @@ def poisson_requests(num: int, rate: float, prompt_len: int,
 def open_loop_sweep(lane_counts: list[int], *, rate: float,
                     num_requests: int, segment_steps: int,
                     max_new: int = 16, prompt_len: int = 8,
-                    mesh=None, seed: int = 0) -> tuple[Table, list[dict]]:
+                    mesh=None, seed: int = 0,
+                    metrics=None) -> tuple[Table, list[dict]]:
     """Open-loop (Poisson) vs batch (all-at-once) continuous serving."""
     tab = Table(
         f"Serve engine, open loop — Poisson arrivals at {rate} req/s vs "
@@ -148,7 +158,8 @@ def open_loop_sweep(lane_counts: list[int], *, rate: float,
             continue
         eng = _engine(cfg, model, params, lanes, max_new=max_new,
                       prompt_len=prompt_len, requests_per_lane=1,
-                      mesh=mesh, segment_steps=segment_steps)
+                      mesh=mesh, segment_steps=segment_steps,
+                      metrics=metrics)
         reqs = poisson_requests(num_requests, rate, prompt_len,
                                 cfg.vocab_size, seed=seed)
         # Warm-up: compile the stepper path on a tiny closed run.
@@ -157,8 +168,7 @@ def open_loop_sweep(lane_counts: list[int], *, rate: float,
             batch = [Request(r.rid, r.prompt, 0.0) for r in reqs] \
                 if mode == "batch" else reqs
             comps, stats = eng.serve(batch, segment_steps=segment_steps)
-            lat = np.array([c.latency for c in comps])
-            p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+            p50, p99 = stats.p50_latency, stats.p99_latency
             tok_s = stats.generated_tokens / stats.wall_time
             tab.add(lanes, mode, tok_s, p50, p99,
                     round(stats.occupancy, 3), stats.segments)
@@ -207,7 +217,8 @@ def chaos_requests(num: int, rate: float, chaos_rate: float,
 def chaos_sweep(lane_counts: list[int], *, rate: float, chaos_rate: float,
                 num_requests: int, segment_steps: int,
                 max_new: int = 64, prompt_len: int = 6,
-                mesh=None, seed: int = 0) -> tuple[Table, list[dict]]:
+                mesh=None, seed: int = 0,
+                metrics=None) -> tuple[Table, list[dict]]:
     """Fault-injected open-loop serving under quarantine.
 
     Chaos-free serve of the healthy subset first (same rids, same
@@ -259,7 +270,8 @@ def chaos_sweep(lane_counts: list[int], *, rate: float, chaos_rate: float,
         healthy = [r for r in reqs if r.rid not in injected]
         eng = _engine(cfg, cmodel, params, lanes, max_new=max_new,
                       prompt_len=prompt_len, requests_per_lane=1,
-                      mesh=mesh, segment_steps=segment_steps, **knobs)
+                      mesh=mesh, segment_steps=segment_steps,
+                      metrics=metrics, **knobs)
         base, _ = eng.serve(healthy)
         base_tokens = {c.rid: c.tokens for c in base}
         comps, stats = eng.serve(reqs)
@@ -290,9 +302,7 @@ def chaos_sweep(lane_counts: list[int], *, rate: float, chaos_rate: float,
                     "chaos-free run"
                 )
                 break
-        ok_lat = np.array([c.latency for c in comps
-                           if c.status == "ok"] or [float("nan")])
-        p50, p99 = (float(np.percentile(ok_lat, q)) for q in (50, 99))
+        p50, p99 = stats.p50_latency, stats.p99_latency
         n = len(reqs)
         tab.add(lanes, stats.ok, stats.faulted, stats.timeout,
                 stats.rejected, stats.retries, p50, p99,
@@ -348,23 +358,36 @@ def main(argv=None) -> int:
                     help="fraction of chaos requests that fault")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable records (strict JSON)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the sweep's shared serve-metrics registry "
+                         "in Prometheus text exposition format")
     args = ap.parse_args(argv)
     lanes = [int(x) for x in args.lanes.split(",")]
     mesh = None if args.mesh.lower() in ("none", "0") else int(args.mesh)
+    metrics = MetricsRegistry() if args.metrics_out else None
     if args.chaos:
         tab, records = chaos_sweep(
             lanes, rate=args.rate, chaos_rate=args.chaos_rate,
             num_requests=args.num_requests,
             segment_steps=args.segment_steps, mesh=mesh, seed=args.seed,
+            metrics=metrics,
         )
     elif args.arrivals == "poisson":
         tab, records = open_loop_sweep(
             lanes, rate=args.rate, num_requests=args.num_requests,
             segment_steps=args.segment_steps, mesh=mesh, seed=args.seed,
+            metrics=metrics,
         )
     else:
         tab, records = serve_sweep(lanes, mesh=mesh)
     print(tab.render())
+    if args.metrics_out:
+        if metrics is None or not metrics.render_prometheus().strip():
+            print("[--metrics-out: closed-loop sweep records no serve "
+                  "metrics]")
+        with open(args.metrics_out, "w") as f:
+            f.write((metrics or MetricsRegistry()).render_prometheus())
+        print(f"[wrote {args.metrics_out}]")
     if args.json:
         write_json(args.json, {
             "benchmark": "serve_bench",

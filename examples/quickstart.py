@@ -69,6 +69,17 @@ collatz = autobatch(
 )
 
 
+def trace_run():
+    """vmtrace entry point: a zero-arg callable returning ``(fn, args)``.
+
+        PYTHONPATH=src python tools/vmtrace.py examples/quickstart.py:trace_run
+
+    runs ``fib`` with dispatch tracing on and exports the Perfetto
+    timeline + block profile (see docs/observability.md).
+    """
+    return fib, (np.array([0, 1, 5, 9, 12, 3, 7, 2], np.int32),)
+
+
 def main():
     n = np.array([0, 1, 5, 9, 12, 3, 7, 2], np.int32)
     print("fib(n)  =", np.asarray(fib(n)))

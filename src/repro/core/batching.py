@@ -38,7 +38,8 @@ Tracing (frontend -> IR) happens once per decorated function; the pc
 backend's stack-explicit lowering happens once per *program*; per-batch-size
 executors and per-aval compiled artifacts are memoized under a
 ``(backend, batch_size, schedule, fuse, verify, dce, on_fault,
-detect_nonfinite, lane_step_budget, mesh, input avals)`` key.  ``cache_info()`` exposes the
+detect_nonfinite, lane_step_budget, compact_every, trace, mesh,
+input avals)`` key.  ``cache_info()`` exposes the
 counters so callers (and tests) can prove that a repeat call at the same
 avals performs no re-trace, no re-lower, and no re-compile, and that a call
 at a *new* batch size reuses the lowering.
@@ -424,6 +425,17 @@ class Stepper:
         """Total VM loop iterations accumulated in this snapshot."""
         return int(jax.device_get(state["steps"]))
 
+    def trace(self, state: dict):
+        """Drain the dispatch trace from a snapshot (device sync).
+
+        Returns a :class:`repro.obs.trace.DispatchTrace` covering every
+        dispatch recorded so far (all segments — the ring is part of the
+        carried snapshot), or ``None`` when the function was built
+        without ``trace=``.  Non-destructive: a later drain sees the
+        same events plus any new ones, on the same global step axis.
+        """
+        return self.vm.get_trace(state)
+
     def park(self, state: dict, mask) -> dict:
         """Park masked lanes at the exit block (idle until re-injected)."""
         return self.vm.park(state, mask)
@@ -539,6 +551,7 @@ class AutobatchedFunction:
         detect_nonfinite: bool = False,
         lane_step_budget: Optional[int] = None,
         compact_every: Optional[int] = None,
+        trace: Any = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -563,6 +576,7 @@ class AutobatchedFunction:
         self.detect_nonfinite = detect_nonfinite
         self.lane_step_budget = lane_step_budget
         self.compact_every = compact_every
+        self.trace = trace
         self.max_depth = max_depth  # None: use the static bound (pc)
         # Resolved lazily (resolving may initialize the jax backend, which
         # a decorator at module import time must not do).
@@ -577,6 +591,21 @@ class AutobatchedFunction:
             collect_block_stats=collect_stats, schedule=schedule, mesh=mesh,
             on_fault=on_fault, detect_nonfinite=detect_nonfinite,
             lane_step_budget=lane_step_budget, compact_every=compact_every,
+            trace=trace,
+        )
+        # Constructor kwargs, for with_options() cloning.  iface pieces
+        # are stored unflattened so a clone rebuilds an identical wrapper.
+        self._init_kwargs = dict(
+            registry=registry, main=main, program=program,
+            iface_args=iface_args, arg_specs=arg_specs,
+            out_treedef=out_treedef, out_leaves=out_leaves,
+            backend=backend, batch_size=batch_size, max_depth=max_depth,
+            max_steps=max_steps, use_kernel=use_kernel,
+            collect_stats=collect_stats, schedule=schedule, fuse=fuse,
+            mesh=mesh, verify=verify, dce=dce, on_fault=on_fault,
+            detect_nonfinite=detect_nonfinite,
+            lane_step_budget=lane_step_budget, compact_every=compact_every,
+            trace=trace,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
@@ -729,6 +758,36 @@ class AutobatchedFunction:
         self._executors[z] = ex
         return ex
 
+    def with_options(self, **overrides: Any) -> "AutobatchedFunction":
+        """A clone of this wrapper with some pc knobs changed.
+
+        ``overrides`` take the :func:`autobatch` keyword names (e.g.
+        ``trace=4096``, ``schedule="lookahead"``, ``collect_stats=False``).
+        The clone shares the traced IR program — and, when ``fuse``/
+        ``dce``/``verify`` are unchanged, the lowering — so turning a knob
+        costs at most a recompile, never a retrace.  This is how tooling
+        (``tools/vmtrace.py``) turns tracing on for an existing
+        ``@autobatch`` function without editing its decoration.
+        """
+        unknown = set(overrides) - set(self._init_kwargs)
+        if unknown:
+            raise TypeError(
+                f"with_options: unknown option(s) {sorted(unknown)}; "
+                f"valid names: {sorted(self._init_kwargs)}"
+            )
+        kw = dict(self._init_kwargs)
+        kw.update(overrides)
+        clone = AutobatchedFunction(**kw)
+        clone._pinned = self._pinned
+        clone._pinned_funcs = dict(self._pinned_funcs)
+        clone._program = self._program
+        if all(
+            kw[k] == self._init_kwargs[k] for k in ("fuse", "dce", "verify")
+        ):
+            clone._lowered = self._lowered
+            clone._depth_report = self._depth_report
+        return clone
+
     def cache_info(self) -> CacheInfo:
         """Executor/compile cache counters.
 
@@ -812,6 +871,14 @@ class AutobatchedFunction:
                 inputs[name] = x
         return inputs, z
 
+    def _trace_key(self) -> Optional[int]:
+        """Hashable trace identity (the resolved ring capacity)."""
+        if self.backend != "pc":
+            return None
+        from repro.obs.trace import resolve_capacity
+
+        return resolve_capacity(self.trace)
+
     def _mesh_key(self) -> Optional[tuple]:
         """Hashable mesh identity (resolved once, at first call time).
 
@@ -844,6 +911,7 @@ class AutobatchedFunction:
             self.detect_nonfinite,
             self.lane_step_budget,
             self.compact_every,
+            self._trace_key(),
             self._mesh_key(),
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
@@ -899,6 +967,13 @@ class AutobatchedFunction:
     def last_result(self) -> Optional[pc_vm.VMResult]:
         """The :class:`pc_vm.VMResult` of the most recent pc-backend call."""
         return self._last_executor.last_result if self._last_executor else None
+
+    @property
+    def last_trace(self):
+        """The :class:`repro.obs.trace.DispatchTrace` of the most recent
+        pc-backend call, or ``None`` (no call yet, or ``trace=`` unset)."""
+        res = self.last_result
+        return res.trace if res is not None else None
 
     @property
     def scheduler_stats(self) -> Optional[pc_vm.SchedulerStats]:
@@ -1062,6 +1137,7 @@ def autobatch(
     detect_nonfinite: bool = False,
     lane_step_budget: Optional[int] = None,
     compact_every: Optional[int] = None,
+    trace: Any = None,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -1125,7 +1201,14 @@ def autobatch(
       the static interprocedural bound (``fn.depth_report``); recursive
       programs have no static bound and fall back to
       ``DEFAULT_MAX_DEPTH=32`` — pass an explicit ``max_depth=`` there
-      (a stack overflow names the recursive cycle).
+      (a stack overflow names the recursive cycle);
+    * ``trace=`` records a per-dispatch trace into a fixed-capacity
+      on-device ring buffer (``True`` = the default capacity, an int =
+      that many events).  Purely observational — outputs, step counts
+      and the dispatch sequence are bit-exact with ``trace=None``.  Read
+      it via ``fn.last_trace`` / ``Stepper.trace(state)`` as a
+      :class:`repro.obs.trace.DispatchTrace`; render timelines with
+      ``repro.obs.timeline`` (see ``docs/observability.md``).
 
     Fault containment knobs (pc backend; also part of the cache key):
 
@@ -1163,6 +1246,7 @@ def autobatch(
             detect_nonfinite=detect_nonfinite,
             lane_step_budget=lane_step_budget,
             compact_every=compact_every,
+            trace=trace,
             registry=registry,
         )
     if registry is not None:
@@ -1185,6 +1269,7 @@ def autobatch(
         schedule=schedule, fuse=fuse, mesh=mesh, verify=verify, dce=dce,
         on_fault=on_fault, detect_nonfinite=detect_nonfinite,
         lane_step_budget=lane_step_budget, compact_every=compact_every,
+        trace=trace,
     )
 
     program: Optional[ir.Program] = None

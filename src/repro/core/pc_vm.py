@@ -119,6 +119,26 @@ run (property-tested).  ``mean_occupancy`` is measured per SIMD tile of
 tiles that held at least one active lane — the quantity compaction
 actually improves, and one that never charges fully-idle (parked,
 quarantined, retired) tiles.
+
+Dispatch tracing (``VMConfig.trace``):
+
+With ``trace=`` set (``True`` or an int event capacity) the loop carry
+gains a fixed-capacity on-device ring buffer that records, per dispatch:
+the chosen block id, the per-block live-resident histogram, active /
+live / quarantined lane counts, the occupied-tile capacity, whether
+compaction ran, and the post-dispatch faulted-lane total.  Recording is
+strictly *write-only* with respect to execution — no traced value feeds
+back into ``cond``, ``_pick_block`` or any block body — so a traced run
+is bit-exact with an untraced one (outputs, step counts, and the dispatch
+sequence itself; property-tested across the schedule x fuse x mesh x
+compact_every x use_kernel matrix).  Drain the buffer host-side with
+:meth:`ProgramCounterVM.get_trace` (or ``VMResult.trace`` after
+``run()``) into a typed :class:`repro.obs.trace.DispatchTrace`; the ring
+index is ``steps % capacity``, so when a run outlives the capacity the
+newest events win and the drain reports how many oldest were dropped.
+Under a mesh the buffers are replicated; the per-event counts are the
+same integer all-reduces the stats path uses, so tracing composes with
+sharding, segments, compaction and quarantine.
 """
 from __future__ import annotations
 
@@ -329,6 +349,11 @@ class VMConfig:
     # Bit-exact with the uncompacted run (outputs, steps, fault codes,
     # per-lane ordering) for every schedule.
     compact_every: Optional[int] = None
+    # Dispatch tracing: None/False disables, True uses the default ring
+    # capacity (repro.obs.trace.DEFAULT_TRACE_CAPACITY events), an int is
+    # an explicit capacity.  Purely observational — never changes outputs,
+    # steps, or dispatch choices.  Drain with get_trace()/VMResult.trace.
+    trace: Any = None
 
     def __post_init__(self):
         if self.on_fault not in ON_FAULT:
@@ -345,6 +370,10 @@ class VMConfig:
                 "compact_every must be >= 1 (or None to disable), got "
                 f"{self.compact_every}"
             )
+        # Normalizes True/int and raises on nonsense (capacity < 1).
+        from repro.obs.trace import resolve_capacity
+
+        resolve_capacity(self.trace)
 
 
 @dataclass(frozen=True)
@@ -390,6 +419,9 @@ class VMResult:
     sched: Optional[SchedulerStats] = None
     fault_code: Optional[Array] = None  # [batch] i32, see FAULT_NAMES
     lane_steps: Optional[Array] = None  # [batch] i32 active-dispatch counts
+    # The drained dispatch trace (repro.obs.trace.DispatchTrace) when the
+    # run had VMConfig.trace set; None otherwise.
+    trace: Optional[Any] = None
 
     @property
     def fault_mask(self) -> Optional[Array]:
@@ -416,6 +448,11 @@ class ProgramCounterVM:
         self.lowered = lowered
         self.config = config
         self.num_blocks = len(lowered.blocks)
+        # Dispatch-trace ring capacity (None = tracing off).  Resolved
+        # once; the buffers live in the loop carry (see init_state).
+        from repro.obs.trace import resolve_capacity
+
+        self.trace_capacity = resolve_capacity(config.trace)
         self.mesh = resolve_mesh(config.mesh)
         self._lane_sharding = None
         self._stack_sharding = None
@@ -562,6 +599,22 @@ class ProgramCounterVM:
             # Occupied-tile capacity accumulated over dispatches — the
             # denominator of the tile-based mean_occupancy.
             state["tile_acc"] = jnp.zeros((), _I32)
+        if self.trace_capacity is not None:
+            # Dispatch-trace ring buffers: one event per loop iteration at
+            # index steps % capacity (so `steps` doubles as the event
+            # count and the drain never needs a separate cursor).  All
+            # write-only w.r.t. execution — see the module docstring.
+            c = self.trace_capacity
+            state["trace"] = {
+                "block": jnp.full((c,), -1, _I32),
+                "resident": jnp.zeros((c, self.num_blocks), _I32),
+                "active": jnp.zeros((c,), _I32),
+                "live": jnp.zeros((c,), _I32),
+                "quarantined": jnp.zeros((c,), _I32),
+                "tile": jnp.zeros((c,), _I32),
+                "compacted": jnp.zeros((c,), jnp.bool_),
+                "faults": jnp.zeros((c,), _I32),
+            }
         return state
 
     def _shard_state(self, state: dict[str, Any]) -> dict[str, Any]:
@@ -596,6 +649,11 @@ class ProgramCounterVM:
             out["block_exec"] = wsc(state["block_exec"], repl)
             out["block_active"] = wsc(state["block_active"], repl)
             out["tile_acc"] = wsc(state["tile_acc"], repl)
+        if "trace" in state:
+            # Trace rings are event-major (not lane-major): replicate.
+            out["trace"] = {
+                k: wsc(x, repl) for k, x in state["trace"].items()
+            }
         return out
 
     # ------------------------------------------------------------------
@@ -763,7 +821,15 @@ class ProgramCounterVM:
             )
             return out
 
-        return run
+        def scoped_run(state: dict[str, Any]) -> dict[str, Any]:
+            # Label the block body in the HLO metadata so device profiles
+            # (jax.profiler / XProf) line up with DispatchTrace events by
+            # block id.  Pure metadata — numerics and scheduling are
+            # untouched.
+            with jax.named_scope(f"pcvm.block{bidx}"):
+                return run(state)
+
+        return scoped_run
 
     # ------------------------------------------------------------------
     # The VM loop
@@ -842,10 +908,71 @@ class ProgramCounterVM:
             )
         return cond
 
+    def _trace_event(
+        self, state: dict[str, Any], block: Any, dispatch_mask: Array
+    ) -> dict[str, Array]:
+        """Pre-dispatch snapshot of one trace event (traced scalars).
+
+        Everything here is *derived* from the state the scheduler already
+        read — the histogram is the same scatter-add ``_pick_block`` uses
+        and the counts are the same integer all-reduces the stats path
+        performs — so recording cannot perturb execution.
+        """
+        live = self._live_mask(state)
+        counts = (
+            jnp.zeros((self.num_blocks,), _I32)
+            .at[jnp.where(live, state["pc_top"], self.num_blocks)]
+            .add(1, mode="drop")
+        )
+        return {
+            # Pre-increment steps == this dispatch's global ordinal ==
+            # its ring slot (idx = step % capacity).
+            "step": state["steps"],
+            "block": jnp.asarray(block, _I32),
+            "resident": counts,
+            "active": jnp.sum(dispatch_mask.astype(_I32)),
+            "live": jnp.sum(live.astype(_I32)),
+            "quarantined": jnp.sum(
+                (state["fault_code"] != FAULT_OK).astype(_I32)
+            ),
+            "tile": _tile_capacity(dispatch_mask),
+        }
+
+    def _trace_commit(
+        self, state: dict[str, Any], ev: dict[str, Array]
+    ) -> dict[str, Any]:
+        """Write one event into the ring (post-dispatch, steps bumped).
+
+        The fault count is read *after* the dispatch so the event shows
+        faults the dispatch itself caused; the compaction flag mirrors
+        ``_maybe_compact``'s cadence condition exactly.
+        """
+        idx = ev["step"] % self.trace_capacity
+        k = self.config.compact_every
+        compacted = (
+            jnp.asarray(False)
+            if k is None
+            else (state["steps"] % k) == 0  # post-increment, == _maybe_compact
+        )
+        faults = jnp.sum((state["fault_code"] != FAULT_OK).astype(_I32))
+        tb = dict(state["trace"])
+        tb["block"] = tb["block"].at[idx].set(ev["block"])
+        tb["resident"] = tb["resident"].at[idx].set(ev["resident"])
+        tb["active"] = tb["active"].at[idx].set(ev["active"])
+        tb["live"] = tb["live"].at[idx].set(ev["live"])
+        tb["quarantined"] = tb["quarantined"].at[idx].set(ev["quarantined"])
+        tb["tile"] = tb["tile"].at[idx].set(ev["tile"])
+        tb["compacted"] = tb["compacted"].at[idx].set(compacted)
+        tb["faults"] = tb["faults"].at[idx].set(faults)
+        out = dict(state)
+        out["trace"] = tb
+        return out
+
     def _make_body(self) -> Callable:
         """The loop body for this config's schedule (shared by the
         single-shot and segmented loops, so the two are bit-exact)."""
         collect = self.config.collect_block_stats
+        tracing = self.trace_capacity is not None
         quarantine = self.config.on_fault == "quarantine"
 
         def resident(state, b):
@@ -865,12 +992,23 @@ class ProgramCounterVM:
                 state["block_exec"] = state["block_exec"].at[i].add(1)
                 state["block_active"] = state["block_active"].at[i].add(active)
                 state["tile_acc"] = state["tile_acc"] + _tile_capacity(m)
+            ev = self._trace_event(state, i, resident(state, i)) if tracing \
+                else None
             state = lax.switch(i, self._block_fns, state)
             state = dict(state)
             state["steps"] = state["steps"] + 1
+            if tracing:
+                state = self._trace_commit(state, ev)
             return self._maybe_compact(state)
 
         def body_sweep(state):
+            # One trace event per sweep iteration: there is no single
+            # chosen block (block = -1, obs.trace.SWEEP_BLOCK) and every
+            # live lane is dispatchable, so active/tile cover the live set.
+            ev = (
+                self._trace_event(state, -1, self._live_mask(state))
+                if tracing else None
+            )
             # Run every resident block once, in index order, each under its
             # own mask — no lax.switch at all.  A member can traverse
             # several (forward) blocks within one sweep.
@@ -893,6 +1031,8 @@ class ProgramCounterVM:
                 state = fn(state)
             state = dict(state)
             state["steps"] = state["steps"] + 1
+            if tracing:
+                state = self._trace_commit(state, ev)
             return self._maybe_compact(state)
 
         return body_sweep if self.config.schedule == "sweep" else body_switch
@@ -1011,11 +1151,15 @@ class ProgramCounterVM:
         donation support) the single composed program is used; the staged
         path would just cost an extra compile and dispatch.
         """
-        if not self._donate:
-            return self._result(self._jitted(inputs))
-        state = self._jitted_start(inputs)
-        state = self._jitted_loop(state)
-        return self._result(state)
+        # Host-side profiler annotation: a jax.profiler trace of the
+        # caller shows VM runs as named spans that device profiles (and
+        # DispatchTrace timelines) can be lined up against.
+        with jax.profiler.TraceAnnotation("pcvm.run"):
+            if not self._donate:
+                return self._result(self._jitted(inputs))
+            state = self._jitted_start(inputs)
+            state = self._jitted_loop(state)
+            return self._result(state)
 
     # ------------------------------------------------------------------
     # Segmented (resumable) execution
@@ -1042,7 +1186,11 @@ class ProgramCounterVM:
         block dispatches for ``earliest``/``popular``, whole sweeps for
         ``sweep`` — matching the ``steps`` counter.
         """
-        return self._jitted_segment(state, jnp.asarray(num_steps, _I32))
+        # Segment boundaries show up as named spans in jax.profiler
+        # traces, so host-loop overhead (admit/retire between segments)
+        # is separable from VM time.
+        with jax.profiler.TraceAnnotation("pcvm.run_segment"):
+            return self._jitted_segment(state, jnp.asarray(num_steps, _I32))
 
     def lane_done(self, state: dict[str, Any]) -> Array:
         """Per-lane halt flags: ``[batch]`` bool, True once a lane exited.
@@ -1158,6 +1306,30 @@ class ProgramCounterVM:
         have halted (partial snapshots simply report in-flight tops)."""
         return self._result(state)
 
+    def get_trace(self, state: dict[str, Any]):
+        """Drain the dispatch-trace ring buffer from a state snapshot.
+
+        Returns a :class:`repro.obs.trace.DispatchTrace` (host numpy,
+        oldest surviving event first), or ``None`` when the VM was built
+        without ``trace=``.  Valid on any snapshot — mid-run, between
+        :meth:`run_segment` calls, or after completion; draining syncs
+        the device (it reads the buffers) but does not consume them, so
+        a later drain sees the same events plus any new ones.
+        """
+        if self.trace_capacity is None:
+            return None
+        from repro.obs.trace import drain
+
+        buffers = jax.device_get(state["trace"])
+        total = int(jax.device_get(state["steps"]))
+        return drain(
+            buffers,
+            total=total,
+            schedule=self.config.schedule,
+            num_blocks=self.num_blocks,
+            batch_size=self.config.batch_size,
+        )
+
     def _result(self, state) -> VMResult:
         lp = self.lowered
         # Restore caller lane order on every per-lane array (identity when
@@ -1221,6 +1393,10 @@ class ProgramCounterVM:
             sched=sched,
             fault_code=restore(state.get("fault_code")),
             lane_steps=restore(state.get("lane_steps")),
+            # Tracing syncs here (the drain reads the device buffers) —
+            # like collect_block_stats, enabling it trades result-time
+            # asynchrony for observability.
+            trace=self.get_trace(state),
         )
 
     # ------------------------------------------------------------------

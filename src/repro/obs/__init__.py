@@ -1,0 +1,43 @@
+"""Observability layer: dispatch traces, Perfetto timelines, serve metrics.
+
+The VM's scheduling decisions are the whole ballgame for throughput —
+which block ran, how many lanes rode along, how much SIMD capacity was
+wasted — yet by default only post-hoc scalars survive a run.  This
+package turns the dispatch stream into first-class data:
+
+* :mod:`trace`     — the typed :class:`~repro.obs.trace.DispatchTrace`
+  drained from the VM's on-device ring buffer (``VMConfig.trace=``);
+* :mod:`timeline`  — Chrome/Perfetto trace-event JSON export;
+* :mod:`blockprof` — per-block profiles (dispatch counts, mean residents,
+  wasted-slot attribution), the block-frequency input for trace-driven
+  superblock formation;
+* :mod:`metrics`   — a counter/gauge/histogram registry with Prometheus
+  text exposition, populated by the serve engine.
+
+Everything here is strictly *observational*: enabling a trace never
+changes outputs, step counts, or dispatch choices (property-tested).
+"""
+from . import blockprof, metrics, timeline, trace
+from .blockprof import BlockProfile, block_profile, format_profile
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .timeline import to_perfetto, validate_perfetto, write_perfetto
+from .trace import DEFAULT_TRACE_CAPACITY, DispatchTrace
+
+__all__ = [
+    "BlockProfile",
+    "Counter",
+    "DEFAULT_TRACE_CAPACITY",
+    "DispatchTrace",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "block_profile",
+    "blockprof",
+    "format_profile",
+    "metrics",
+    "timeline",
+    "to_perfetto",
+    "trace",
+    "validate_perfetto",
+    "write_perfetto",
+]

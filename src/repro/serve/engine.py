@@ -91,6 +91,11 @@ class EngineConfig:
     # (pc backend; composes with mesh — each device runs the kernel over
     # its own lane slice).
     use_kernel: bool = False
+    # Dispatch tracing (pc backend; see pc_vm.VMConfig.trace): carry an
+    # on-device ring buffer recording every dispatch.  Drain it after
+    # serve() with ``engine.serve_batched.stepper(...)`` state or via the
+    # VM result; recording never changes serving behavior.
+    trace: Any = None
     # ---- fault containment & resilience (serve/generate) ----
     # VM fault policy (see pc_vm.VMConfig.on_fault).  The serving default
     # is "quarantine": one faulted request must never take down the other
@@ -211,14 +216,27 @@ class ServeStats:
     retries: int = 0  # re-enqueues (not counted in the terminal counters)
     straggler_events: int = 0  # segments flagged by StragglerPolicy
     checkpoints: int = 0  # crash-resume snapshots written
+    # Arrival->finish latency percentiles over "ok" completions, seconds
+    # (nan when the run produced none).
+    p50_latency: float = float("nan")
+    p99_latency: float = float("nan")
     _occ_acc: float = field(default=0.0, repr=False)
 
 
 class GenerationEngine:
-    def __init__(self, model: Model, params: Any, cfg: EngineConfig):
+    def __init__(self, model: Model, params: Any, cfg: EngineConfig,
+                 metrics: Optional["MetricsRegistry"] = None):
+        from repro.obs.metrics import MetricsRegistry
+
         self.model = model
         self.params = params
         self.cfg = cfg
+        #: Serve-loop instrumentation (obs.metrics).  Pass a shared
+        #: registry to aggregate several engines into one scrape target;
+        #: serve() populates it and ``serve_bench --metrics-out`` dumps it.
+        self.metrics: MetricsRegistry = (
+            metrics if metrics is not None else MetricsRegistry()
+        )
         self.treedef, self.axes, self.member_specs = _cache_layout(
             model, cfg.max_context
         )
@@ -232,6 +250,7 @@ class GenerationEngine:
                 lane_step_budget=cfg.lane_step_budget,
                 compact_every=cfg.compact_every,
                 use_kernel=cfg.use_kernel,
+                trace=cfg.trace,
             )
             if cfg.backend == "pc"
             else {}
@@ -485,6 +504,7 @@ class GenerationEngine:
                 lane_step_budget=self.cfg.lane_step_budget,
                 compact_every=self.cfg.compact_every,
                 use_kernel=self.cfg.use_kernel,
+                trace=self.cfg.trace,
             )
         return self._serve_batched
 
@@ -575,6 +595,23 @@ class GenerationEngine:
         pol = straggler if straggler is not None else StragglerPolicy()
         completions: list[Completion] = []
         stats = ServeStats()
+        m = self.metrics
+        m_admissions = m.counter(
+            "serve_admissions_total", "requests injected into a lane")
+        m_completions = m.counter(
+            "serve_completions_total", "terminal completions by status")
+        m_retries = m.counter(
+            "serve_retries_total", "faulted/timed-out re-enqueues")
+        m_tokens = m.counter(
+            "serve_generated_tokens_total", "tokens emitted by ok lanes")
+        m_queue = m.gauge(
+            "serve_queue_depth", "arrived-but-not-admitted requests")
+        m_lanes = m.gauge("serve_active_lanes", "lanes with a request in flight")
+        m_seg = m.histogram(
+            "serve_segment_seconds", "wall time of one VM segment")
+        m_latency = m.histogram(
+            "serve_request_latency_seconds",
+            "arrival->finish latency by terminal status")
         done_rids: set[int] = set()
         # Queue entries: one admission attempt of one request.
         # {"req", "attempt", "not_before", "anchor", "deadline_at",
@@ -670,6 +707,8 @@ class GenerationEngine:
             completions.append(comp)
             done_rids.add(r.rid)
             setattr(stats, status, getattr(stats, status) + 1)
+            m_completions.inc(status=status)
+            m_latency.observe(comp.latency, status=status)
             if on_finish is not None:
                 on_finish(comp)
 
@@ -678,6 +717,7 @@ class GenerationEngine:
                                fault: Optional[str] = None) -> None:
             if e["attempt"] < cfg.max_attempts:
                 stats.retries += 1
+                m_retries.inc(reason=status)
                 delay = cfg.retry_backoff_s * (2 ** (e["attempt"] - 1))
                 pend.append(
                     _entry(e["req"], attempt=e["attempt"] + 1,
@@ -700,6 +740,7 @@ class GenerationEngine:
             mask[lane] = True
             e["admitted"] = t_now
             active[lane] = e
+            m_admissions.inc()
 
         def _save_checkpoint() -> None:
             nonlocal ckpt_step
@@ -766,8 +807,12 @@ class GenerationEngine:
             idle_spins = 0
 
             # ---- one VM segment -------------------------------------
+            m_queue.set(len(waiting))
+            m_lanes.set(len(active))
             t_seg = time.perf_counter()
-            state = st.step(state, seg)
+            with jax.profiler.TraceAnnotation("serve.segment"):
+                state = st.step(state, seg)
+            m_seg.observe(time.perf_counter() - t_seg)
             stats.segments += 1
             stats._occ_acc += len(active) / z
             if st.steps(state) >= max_steps_budget:
@@ -820,6 +865,7 @@ class GenerationEngine:
                     toks = tokens[lane, : int(lengths[lane])].copy()
                     _terminal(e, "ok", lane, t_now, tokens=toks)
                     stats.generated_tokens += int(lengths[lane])
+                    m_tokens.inc(int(lengths[lane]))
                     free.append(lane)
             if park_mask.any():
                 # Idle the retired-with-prejudice lanes (a later inject
@@ -842,6 +888,15 @@ class GenerationEngine:
             stats._occ_acc / stats.segments if stats.segments else 0.0
         )
         stats.straggler_events = len(pol.flagged)
+        stats.p50_latency = m_latency.percentile(50, status="ok")
+        stats.p99_latency = m_latency.percentile(99, status="ok")
+        m_queue.set(0)
+        m_lanes.set(0)
+        if stats.wall_time > 0:
+            m.gauge(
+                "serve_tokens_per_second",
+                "generated-token throughput of the finished run",
+            ).set(stats.generated_tokens / stats.wall_time)
         completions.sort(key=lambda c: c.rid)
         return completions, stats
 

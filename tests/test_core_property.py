@@ -319,6 +319,75 @@ def test_compaction_kernel_matrix_matches_uncompacted(schedule, fuse):
             )
 
 
+@pytest.mark.parametrize(
+    "schedule,fuse",
+    [
+        ("earliest", True),
+        ("popular", True),
+        ("sweep", True),
+        ("lookahead", True),
+        ("popular", False),
+    ],
+)
+def test_trace_is_bitexact_neutral(schedule, fuse):
+    """The ISSUE 9 tentpole contract: ``trace=`` recording is strictly
+    write-only.  For every schedule x fuse x mesh x compact_every x
+    use_kernel cell, outputs, VM step count AND per-lane fault codes must
+    be identical with tracing on (any ring capacity) and off — the ring
+    buffer rides along in loop state but never feeds a dispatch choice,
+    a mask, or a lane update."""
+    import jax
+
+    rng = np.random.default_rng(23)
+    prog = _Gen(rng).build()
+    pairs = [(int(rng.integers(0, 5)), int(rng.integers(-50, 51)))
+             for _ in range(8)]
+    n = np.array([i[0] for i in pairs], np.int32)
+    x = np.array([i[1] for i in pairs], np.int32)
+    base_fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule=schedule, fuse=fuse,
+    )
+    base = np.asarray(base_fn(n, x)["out"])
+    base_steps = int(base_fn.last_result.steps)
+    base_faults = np.asarray(base_fn.last_result.fault_code)
+    meshes = [None] + ([2] if jax.device_count() >= 2 else [])
+    # trace=16 overflows the ring on these programs (hundreds of
+    # dispatches), proving overflow handling is neutral too; the
+    # use_kernel cell is pallas-interpret on CPU (slow) so only the
+    # earliest arm carries it.
+    cells = [(True, None, False), (16, None, False), (True, 7, False)]
+    if schedule == "earliest":
+        cells.append((True, None, True))
+    for mesh in meshes:
+        for trace, ce, use_kernel in cells:
+            fn = batching.autobatch(
+                prog, backend="pc", max_depth=64, max_steps=200_000,
+                schedule=schedule, fuse=fuse, mesh=mesh,
+                compact_every=ce, use_kernel=use_kernel, trace=trace,
+            )
+            tag = (f"pc[{schedule},fuse={fuse},mesh={mesh},"
+                   f"compact={ce},kernel={use_kernel},trace={trace}]")
+            np.testing.assert_array_equal(
+                np.asarray(fn(n, x)["out"]), base,
+                err_msg=f"{tag} != untraced baseline",
+            )
+            res = fn.last_result
+            assert int(res.steps) == base_steps, (
+                f"{tag}: step count {int(res.steps)} != baseline "
+                f"{base_steps} — tracing changed the dispatch sequence"
+            )
+            np.testing.assert_array_equal(
+                np.asarray(res.fault_code), base_faults,
+                err_msg=f"{tag}: fault codes != untraced baseline",
+            )
+            tr = fn.last_trace
+            assert tr is not None and tr.total_dispatches == base_steps
+            assert len(tr) == min(base_steps,
+                                  16 if trace == 16 else len(tr))
+            assert tr.dropped == tr.total_dispatches - len(tr)
+
+
 @pytest.mark.parametrize("seg", [3, 16])
 def test_compaction_segmented_quarantine_matches_uncompacted(seg):
     """Compaction under the full serving stack of knobs: segmented

@@ -1,0 +1,352 @@
+"""Observability tests (ISSUE 9): dispatch tracing, Perfetto timelines,
+block profiles, and the serve-metrics registry.
+
+The anchor test replays every traced dispatch against the NumPy
+scheduler oracle (``tests/test_scheduler_oracle.py``): each trace event
+records the pre-dispatch resident histogram, so the oracle can predict
+the chosen block from the trace alone — recording is honest only if the
+prediction matches ``trace.block`` event-for-event.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import batching
+from repro.obs import (
+    Counter,
+    DispatchTrace,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    block_profile,
+    to_perfetto,
+    validate_perfetto,
+    write_perfetto,
+)
+from repro.obs.timeline import segment_tracks
+from repro.obs.trace import SWEEP_BLOCK, resolve_capacity
+from tests.test_core_property import _Gen
+from tests.test_scheduler_oracle import _succ_matrix
+
+
+def _traced_fn(seed: int, schedule: str, **kw):
+    rng = np.random.default_rng(seed)
+    prog = _Gen(rng).build()
+    n = rng.integers(0, 5, size=8).astype(np.int32)
+    x = rng.integers(-50, 51, size=8).astype(np.int32)
+    fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule=schedule, trace=True, **kw,
+    )
+    return fn, n, x
+
+
+def _oracle_pick_from_counts(counts: np.ndarray, schedule: str,
+                             succ: np.ndarray) -> int:
+    """The scheduler oracle, driven by a traced resident histogram.
+
+    Same scoring as ``test_scheduler_oracle._oracle_pick`` but from the
+    per-block counts a trace event records instead of raw pcs (the two
+    are equivalent: counts = bincount(pc[live])).
+    """
+    if schedule == "earliest":
+        resident = np.flatnonzero(counts)
+        return int(resident[0]) if len(resident) else 0
+    if schedule == "popular":
+        return int(np.argmax(counts))
+    assert schedule == "lookahead"
+    score = 2 * counts + succ @ counts
+    score = np.where(counts > 0, score, -1)
+    return int(np.argmax(score))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch trace vs the scheduler oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("schedule", ["earliest", "popular", "lookahead"])
+def test_trace_replays_against_scheduler_oracle(seed, schedule):
+    """Every traced dispatch must be predictable from its own recorded
+    resident histogram: the trace is an honest transcript of
+    ``_pick_block``, not an approximation of it."""
+    fn, n, x = _traced_fn(seed, schedule)
+    fn(n, x)
+    tr = fn.last_trace
+    assert tr.dropped == 0, "test programs must fit the default ring"
+    assert len(tr) >= 20, "trace too short to exercise the scheduler"
+    succ = _succ_matrix(fn.stepper(n, x).vm.lowered)
+    for i in range(len(tr)):
+        want = _oracle_pick_from_counts(
+            np.asarray(tr.resident[i]), schedule, succ
+        )
+        assert int(tr.block[i]) == want, (
+            f"event {i}: trace recorded block {int(tr.block[i])}, oracle "
+            f"replays {want} from residents {tr.resident[i].tolist()} "
+            f"(schedule={schedule})"
+        )
+        # The histogram itself must be internally consistent.
+        assert int(tr.resident[i].sum()) == int(tr.live[i])
+        assert int(tr.active[i]) >= 1
+
+
+@pytest.mark.parametrize("seed", [0])
+def test_sweep_trace_records_sentinel_block(seed):
+    fn, n, x = _traced_fn(seed, "sweep")
+    fn(n, x)
+    tr = fn.last_trace
+    assert (tr.block == SWEEP_BLOCK).all()
+    # A sweep iteration's active count is the live-lane count.
+    np.testing.assert_array_equal(tr.active, tr.live)
+
+
+def test_trace_matches_block_exec_histogram():
+    fn, n, x = _traced_fn(3, "popular", collect_stats=True)
+    fn(n, x)
+    tr = fn.last_trace
+    be = np.asarray(fn.last_result.block_exec)
+    hist = np.bincount(tr.block, minlength=tr.num_blocks)
+    np.testing.assert_array_equal(hist, be)
+
+
+def test_ring_overflow_keeps_newest_events():
+    fn, n, x = _traced_fn(0, "earliest")
+    fn(n, x)
+    full = fn.last_trace
+    total = full.total_dispatches
+    cap = 8
+    small = fn.with_options(trace=cap)
+    np.testing.assert_array_equal(
+        np.asarray(small(n, x)["out"]), np.asarray(fn(n, x)["out"])
+    )
+    tr = small.last_trace
+    assert tr.capacity == cap and len(tr) == cap
+    assert tr.total_dispatches == total
+    assert tr.dropped == total - cap
+    # Absolute dispatch ordinals of exactly the newest `cap` events.
+    np.testing.assert_array_equal(tr.steps, np.arange(total - cap, total))
+    np.testing.assert_array_equal(tr.block, full.block[-cap:])
+
+
+def test_segmented_trace_equals_single_shot():
+    fn, n, x = _traced_fn(3, "lookahead")
+    fn(n, x)
+    full = fn.last_trace
+    st = fn.stepper(n, x)
+    state = st.init()
+    mid = None
+    while not st.done(state):
+        state = st.step(state, 5)
+        if mid is None:
+            mid = st.trace(state)  # drain mid-run: must be a prefix
+    tr = st.trace(state)
+    np.testing.assert_array_equal(tr.block, full.block)
+    np.testing.assert_array_equal(tr.steps, full.steps)
+    np.testing.assert_array_equal(tr.resident, full.resident)
+    assert mid is not None and len(mid) <= len(tr)
+    np.testing.assert_array_equal(mid.block, tr.block[: len(mid)])
+
+
+def test_compaction_events_recorded_and_neutral():
+    fn, n, x = _traced_fn(0, "popular")
+    base = np.asarray(fn(n, x)["out"])
+    comp = fn.with_options(compact_every=4)
+    np.testing.assert_array_equal(np.asarray(comp(n, x)["out"]), base)
+    tr = comp.last_trace
+    assert tr.compacted.any()
+    # compact_every=4 marks exactly the post-increment multiples of 4.
+    np.testing.assert_array_equal(
+        np.asarray(tr.compacted), (np.asarray(tr.steps) + 1) % 4 == 0
+    )
+
+
+def test_resolve_capacity_validation():
+    from repro.core.pc_vm import VMConfig
+
+    assert resolve_capacity(None) is None
+    assert resolve_capacity(False) is None
+    assert resolve_capacity(True) >= 1
+    assert resolve_capacity(12) == 12
+    with pytest.raises(ValueError):
+        resolve_capacity(0)
+    with pytest.raises(ValueError):
+        resolve_capacity("yes")
+    with pytest.raises(ValueError):
+        VMConfig(batch_size=4, trace=-3)  # validated at config time
+
+
+# ---------------------------------------------------------------------------
+# Timeline export
+# ---------------------------------------------------------------------------
+
+
+def test_perfetto_export_is_valid_and_strict(tmp_path):
+    fn, n, x = _traced_fn(0, "earliest")
+    fn(n, x)
+    tr = fn.last_trace
+    path = str(tmp_path / "trace.json")
+    obj = write_perfetto(path, tr)
+    assert validate_perfetto(path) == len(obj["traceEvents"])
+    with open(path) as f:  # strict JSON: no bare NaN/Infinity tokens
+        json.load(f, parse_constant=lambda c: pytest.fail(
+            f"non-strict constant {c!r} in perfetto output"))
+    # One "X" event per traced dispatch, on the chosen block's track.
+    xs = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert len(xs) == len(tr)
+    assert [e["tid"] for e in xs] == [int(b) for b in tr.block]
+    assert obj["otherData"]["total_dispatches"] == tr.total_dispatches
+
+
+def test_perfetto_validator_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_perfetto({"nope": []})
+    with pytest.raises(ValueError):
+        validate_perfetto({"traceEvents": []})
+    with pytest.raises(ValueError):
+        validate_perfetto(
+            {"traceEvents": [{"name": "a", "ph": "X", "pid": 1}]}
+        )  # X without ts/dur
+
+
+def test_segment_tracks_merges_on_global_ordinals(tmp_path):
+    fn, n, x = _traced_fn(3, "earliest")
+    st = fn.stepper(n, x)
+    state = st.init()
+    traces = []
+    while not st.done(state):
+        state = st.step(state, 7)
+        traces.append(st.trace(state))
+    merged = segment_tracks(traces, path=str(tmp_path / "seg.json"))
+    assert validate_perfetto(str(tmp_path / "seg.json")) > 0
+    assert merged["otherData"]["segments"] == len(traces)
+    names = [e["name"] for e in merged["traceEvents"] if e["ph"] == "M"]
+    assert len(names) == len(set(
+        (e["name"], e.get("tid")) for e in merged["traceEvents"]
+        if e["ph"] == "M"
+    )), "metadata events must be deduplicated"
+
+
+# ---------------------------------------------------------------------------
+# Block profiles
+# ---------------------------------------------------------------------------
+
+
+def test_block_profile_consistent_with_trace(tmp_path):
+    fn, n, x = _traced_fn(0, "popular", collect_stats=True)
+    fn(n, x)
+    tr = fn.last_trace
+    prof = block_profile(tr)
+    np.testing.assert_array_equal(
+        prof.dispatches, np.asarray(fn.last_result.block_exec)
+    )
+    np.testing.assert_array_equal(
+        prof.total_active, np.asarray(fn.last_result.block_active)
+    )
+    assert (prof.wasted_slots >= 0).all()
+    assert (prof.occupancy <= 1.0 + 1e-9).all()
+    # Transition counts cover every consecutive scheduled pair.
+    assert prof.transitions.sum() == len(tr) - 1
+    # The versioned superblock-pass input format round-trips strictly.
+    path = str(tmp_path / "prof.json")
+    prof.save(path)
+    with open(path) as f:
+        obj = json.load(f, parse_constant=lambda c: pytest.fail(c))
+    assert obj["version"] == 1
+    assert len(obj["blocks"]) == tr.num_blocks
+    assert sum(b["dispatches"] for b in obj["blocks"]) == len(tr)
+
+
+def test_block_profile_excludes_sweep_iterations():
+    fn, n, x = _traced_fn(0, "sweep")
+    fn(n, x)
+    prof = block_profile(fn.last_trace)
+    assert prof.dispatches.sum() == 0
+    assert prof.transitions.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter(self):
+        c = Counter("requests_total", "help!")
+        c.inc()
+        c.inc(2, status="ok")
+        assert c.value() == 1 and c.value(status="ok") == 2
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_gauge(self):
+        g = Gauge("depth")
+        g.set(5)
+        g.dec(2)
+        assert g.value() == 3
+
+    def test_histogram_percentiles_and_buckets(self):
+        h = Histogram("lat", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.5, 2.0):
+            h.observe(v)
+        assert h.count() == 4 and h.sum() == pytest.approx(3.05)
+        assert h.percentile(50) == pytest.approx(0.5)
+        assert np.isnan(h.percentile(50, status="missing"))
+        rendered = dict(
+            (name + labels, v) for name, labels, v in h.samples()
+        )
+        assert rendered['lat_bucket{le="0.1"}'] == 1
+        assert rendered['lat_bucket{le="1"}'] == 3
+        assert rendered['lat_bucket{le="+Inf"}'] == 4
+
+    def test_registry_get_or_create_and_type_clash(self):
+        r = MetricsRegistry()
+        assert r.counter("a") is r.counter("a")
+        with pytest.raises(ValueError):
+            r.gauge("a")
+        assert r.get("a").type == "counter"
+        assert r.get("missing") is None
+
+    def test_prometheus_rendering(self):
+        r = MetricsRegistry()
+        r.counter("reqs", "total requests").inc(3, status="ok")
+        r.gauge("depth").set(2)
+        r.histogram("lat", buckets=(1.0,)).observe(0.5)
+        text = r.render_prometheus()
+        assert "# HELP reqs total requests" in text
+        assert "# TYPE reqs counter" in text
+        assert 'reqs{status="ok"} 3' in text
+        assert "depth 2" in text
+        assert 'lat_bucket{le="+Inf"} 1' in text
+        assert text.endswith("\n")
+
+    def test_invalid_names_rejected(self):
+        with pytest.raises(ValueError):
+            Counter("bad name")
+        with pytest.raises(ValueError):
+            Gauge("1starts_with_digit")
+
+
+# ---------------------------------------------------------------------------
+# Drain shape contract
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_trace_properties():
+    tr = DispatchTrace(
+        schedule="earliest", num_blocks=2, batch_size=4, capacity=8,
+        total_dispatches=3, dropped=0,
+        steps=np.arange(3), block=np.array([0, 1, 0]),
+        resident=np.array([[2, 1], [1, 1], [1, 0]]),
+        active=np.array([2, 1, 1]), live=np.array([3, 2, 1]),
+        quarantined=np.zeros(3, np.int64),
+        tile_capacity=np.array([8, 8, 0]),
+        compacted=np.zeros(3, bool),
+        faults=np.array([0, 1, 1]),
+    )
+    assert len(tr) == 3
+    occ = tr.occupancy
+    assert occ[0] == pytest.approx(0.25)
+    assert occ[2] == 0.0, "zero tile capacity must not divide to nan"
+    np.testing.assert_array_equal(tr.fault_events, [0, 1, 0])

@@ -205,6 +205,58 @@ class TestContinuousServe:
         assert stats.generated_tokens == int(ref["lengths"].sum())
         assert 0.0 < stats.occupancy <= 1.0
 
+    def test_metrics_and_latency_percentiles(self, small_lm):
+        """serve() populates the engine's obs.metrics registry and backfills
+        ServeStats.p50/p99 (exact percentiles over "ok" latencies)."""
+        m, eng = self._engine(small_lm, lanes=2)
+        rng = np.random.default_rng(7)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(
+                1, m.cfg.vocab_size, (3,)).astype(np.int32))
+            for i in range(4)
+        ]
+        comps, stats = eng.serve(reqs)
+        assert stats.ok == 4
+        lat = sorted(c.latency for c in comps)
+        assert 0.0 <= stats.p50_latency <= stats.p99_latency
+        assert stats.p99_latency <= lat[-1] + 1e-9
+        reg = eng.metrics
+        assert reg.get("serve_admissions_total").value() == 4
+        assert reg.get("serve_completions_total").value(status="ok") == 4
+        assert (reg.get("serve_generated_tokens_total").value()
+                == stats.generated_tokens)
+        seg_h = reg.get("serve_segment_seconds")
+        assert seg_h.count() == stats.segments
+        lat_h = reg.get("serve_request_latency_seconds")
+        assert lat_h.count(status="ok") == 4
+        assert stats.p50_latency == lat_h.percentile(50, status="ok")
+        text = reg.render_prometheus()
+        assert 'serve_completions_total{status="ok"} 4' in text
+        assert "# TYPE serve_segment_seconds histogram" in text
+        # A shared registry aggregates across engines/runs.
+        _, eng2 = self._engine(small_lm, lanes=2)
+        eng2.metrics = reg
+        eng2.serve([Request(rid=9, prompt=np.array([1], np.int32))])
+        assert reg.get("serve_admissions_total").value() == 5
+
+    def test_serve_with_trace_is_neutral(self, small_lm):
+        """EngineConfig.trace composes with open-loop serving: identical
+        completions, and the drained trace covers the run's dispatches."""
+        m, eng = self._engine(small_lm, lanes=2)
+        rng = np.random.default_rng(8)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(
+                1, m.cfg.vocab_size, (2 + i % 3,)).astype(np.int32))
+            for i in range(3)
+        ]
+        base, base_stats = eng.serve(reqs)
+        _, teng = self._engine(small_lm, lanes=2, trace=64)
+        comps, stats = teng.serve(reqs)
+        assert stats.vm_steps == base_stats.vm_steps
+        for c, b in zip(comps, base):
+            assert c.rid == b.rid and c.status == b.status
+            np.testing.assert_array_equal(c.tokens, b.tokens)
+
     def test_streaming_and_lane_reuse(self, small_lm):
         """Completions stream via on_finish as lanes retire, and lanes are
         actually reused (more requests than lanes, bounded lane ids)."""

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""vmtrace: run an autobatched program with dispatch tracing and export
+a Perfetto timeline plus a per-block profile.
+
+    PYTHONPATH=src python tools/vmtrace.py [--nuts] [SPEC ...] \\
+        [--out trace.json] [--blockprof profile.json]
+
+Each SPEC is ``module:attr`` or ``path/to/file.py:attr``, where ``attr``
+resolves to a zero-argument callable returning ``(fn, args)`` — an
+``AutobatchedFunction`` (any trace/backend setting; vmtrace re-enables
+tracing via ``with_options``) and the positional arguments to call it
+with.  ``--nuts`` runs the built-in NUTS kernel (the paper's experiment)
+at ``--batch`` chains.
+
+For every program, vmtrace:
+
+1. clones the handle with ``trace=<--capacity>`` (recording never changes
+   execution — outputs, step counts and dispatch choices are bit-exact
+   with tracing off),
+2. runs it and drains the on-device dispatch ring buffer,
+3. writes the Chrome/Perfetto trace-event JSON (``--out``; open it at
+   https://ui.perfetto.dev), schema-validating what it wrote,
+4. prints the per-block profile table (dispatch counts, mean residents,
+   tile occupancy, wasted-slot attribution) and optionally saves the
+   versioned block-frequency profile JSON (``--blockprof``) that the
+   trace-driven superblock pass consumes.
+
+Exit status 1 if any program fails to run, records no events, or emits
+an invalid trace file — this is the CI smoke gate for the observability
+surface.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import sys
+from pathlib import Path
+
+
+def _load_attr(spec: str):
+    if ":" not in spec:
+        raise SystemExit(f"vmtrace: bad spec {spec!r} (want module:attr)")
+    mod_name, attr = spec.rsplit(":", 1)
+    if mod_name.endswith(".py") or "/" in mod_name:
+        path = Path(mod_name)
+        if not path.exists():
+            raise SystemExit(f"vmtrace: no such file: {path}")
+        loaded = importlib.util.spec_from_file_location(path.stem, path)
+        mod = importlib.util.module_from_spec(loaded)
+        loaded.loader.exec_module(mod)
+    else:
+        mod = importlib.import_module(mod_name)
+    try:
+        return getattr(mod, attr)
+    except AttributeError:
+        raise SystemExit(f"vmtrace: {mod_name} has no attribute {attr!r}")
+
+
+def _as_run(obj):
+    """Resolve a spec'd object to ``(AutobatchedFunction, args)``."""
+    from repro.core import batching
+
+    if callable(obj) and not isinstance(obj, batching.AutobatchedFunction):
+        obj = obj()
+    if isinstance(obj, batching.AutobatchedFunction):
+        raise SystemExit(
+            "vmtrace: a bare AutobatchedFunction has no inputs to run "
+            "with; point the SPEC at a zero-arg callable returning "
+            "(fn, args)"
+        )
+    if (isinstance(obj, tuple) and len(obj) == 2
+            and isinstance(obj[0], batching.AutobatchedFunction)):
+        return obj
+    raise SystemExit(
+        f"vmtrace: cannot run {type(obj).__name__} (want a zero-arg "
+        "callable returning (AutobatchedFunction, args))"
+    )
+
+
+def _nuts_run(batch: int):
+    from repro.mcmc import nuts, targets
+
+    t = targets.isotropic_gaussian(2)
+    s = nuts.NutsSettings(max_tree_depth=3, num_steps=2, steps_per_leaf=2)
+    kernel = nuts.make_nuts_kernel(t, s, backend="pc", batch_size=batch)
+    return kernel, nuts.initial_state(t, batch, eps=0.1, seed=0)
+
+
+def trace_one(name: str, fn, args, *, capacity, out, blockprof) -> bool:
+    """Run ``fn(*args)`` with tracing on; export + validate artifacts."""
+    from repro.obs import (
+        block_profile, format_profile, validate_perfetto, write_perfetto,
+    )
+
+    print(f"== {name} ==")
+    if fn.backend != "pc":
+        print(f"FAILED: dispatch tracing needs the pc backend "
+              f"(got {fn.backend!r})")
+        return False
+    traced = fn.with_options(trace=capacity)
+    traced(*args)
+    tr = traced.last_trace
+    if tr is None or len(tr) == 0:
+        print("FAILED: run recorded no dispatch events")
+        return False
+    print(f"dispatches: {tr.total_dispatches} "
+          f"(captured {len(tr)}, dropped {tr.dropped}) "
+          f"schedule={tr.schedule} batch={tr.batch_size}")
+    if out:
+        write_perfetto(out, tr)
+        n = validate_perfetto(out)
+        print(f"wrote {out}: {n} trace events (valid)")
+    prof = block_profile(tr)
+    print(format_profile(prof))
+    if blockprof:
+        prof.save(blockprof)
+        print(f"wrote {blockprof}: block-frequency profile "
+              f"(superblock-pass input)")
+    print()
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="vmtrace", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument("specs", nargs="*", metavar="SPEC",
+                    help="module:attr or path.py:attr resolving to a "
+                         "zero-arg callable returning (fn, args)")
+    ap.add_argument("--nuts", action="store_true",
+                    help="also trace the built-in NUTS kernel")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="--nuts chain count (default 32)")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="trace ring-buffer capacity in dispatches "
+                         "(default: obs.trace.DEFAULT_TRACE_CAPACITY; "
+                         "older events beyond it are dropped)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the Perfetto trace-event JSON here")
+    ap.add_argument("--blockprof", default=None, metavar="PATH",
+                    help="write the block-frequency profile JSON here")
+    args = ap.parse_args(argv)
+    if not args.specs and not args.nuts:
+        ap.error("nothing to trace: pass SPECs and/or --nuts")
+    capacity = True if args.capacity is None else args.capacity
+
+    runs: list[tuple[str, object, tuple]] = []
+    if args.nuts:
+        fn, fn_args = _nuts_run(args.batch)
+        runs.append((f"nuts (built-in, batch={args.batch})", fn, fn_args))
+    for spec in args.specs:
+        fn, fn_args = _as_run(_load_attr(spec))
+        runs.append((spec, fn, fn_args))
+
+    ok = True
+    for name, fn, fn_args in runs:
+        ok &= trace_one(name, fn, fn_args, capacity=capacity,
+                        out=args.out, blockprof=args.blockprof)
+    if not ok:
+        print("vmtrace: FAILED")
+        return 1
+    print(f"vmtrace: {len(runs)} program(s) traced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
