@@ -14,7 +14,8 @@ Arms (matching the paper's, adapted to JAX per DESIGN.md §2):
                     expert-manual-effort ceiling the paper cites.
 
 The ``pc`` arm expands into one column per ``--schedule`` x ``--fuse`` x
-``--mesh`` x ``--compact-every`` x ``--use-kernel`` combination (e.g.
+``--mesh`` x ``--compact-every`` x ``--use-kernel`` x ``--pgo``
+combination (e.g.
 ``--schedule earliest,popular --fuse on,off --mesh none,8
 --compact-every none,1``), so the dispatch-overhead win of superblock
 fusion / occupancy scheduling, the multi-device scaling of lane sharding,
@@ -48,14 +49,22 @@ from repro.mcmc import iterative, nuts, targets
 
 from .common import Table, best_of, write_json
 
-#: (schedule, fuse, mesh, compact_every, use_kernel) combinations the
+#: (schedule, fuse, mesh, compact_every, use_kernel, pgo) combinations the
 #: plain "pc" arm expands into (mesh=None means unsharded single-device
-#: execution; compact_every=None means no lane compaction).
-DEFAULT_PC_VARIANTS = (("earliest", True, None, None, False),)
+#: execution; compact_every=None means no lane compaction; pgo=True
+#: re-lowers through the profile-guided pipeline from a trace collected
+#: at setup time).
+DEFAULT_PC_VARIANTS = (("earliest", True, None, None, False, False),)
+
+#: Trace-ring capacity for the setup-time profiling run of a pgo variant
+#: (large enough that the profile covers the whole run at the profiling
+#: batch; dropped early events would skew hotness toward late blocks).
+PGO_TRACE_CAPACITY = 262_144
 
 
 def pc_arm_name(schedule: str, fuse: bool, mesh, compact_every=None,
-                use_kernel: bool = False, *, solo: bool) -> str:
+                use_kernel: bool = False, pgo: bool = False,
+                *, solo: bool) -> str:
     if solo:
         return "pc"
     parts = [schedule, "fuse" if fuse else "nofuse"]
@@ -65,6 +74,8 @@ def pc_arm_name(schedule: str, fuse: bool, mesh, compact_every=None,
         parts.append(f"ce{compact_every}")
     if use_kernel:
         parts.append("kernel")
+    if pgo:
+        parts.append("pgo")
     return f"pc[{','.join(parts)}]"
 
 
@@ -93,19 +104,21 @@ def throughput_sweep(
     gpl = settings.grads_per_leaf
 
     # Expand the "pc" arm into one column per
-    # (schedule, fuse, mesh, compact_every, use_kernel) variant.
+    # (schedule, fuse, mesh, compact_every, use_kernel, pgo) variant.
     solo = len(pc_variants) == 1
     columns: list[str] = []
     pc_meta: dict[str, tuple] = {}
+    _defaults = (None, False, False)  # (compact_every, use_kernel, pgo)
     for arm in arms:
         if arm == "pc":
             for variant in pc_variants:
                 # Back-compat: 3-tuples from older callers mean
-                # (schedule, fuse, mesh) with no compaction / kernel.
-                sched, fz, mesh, ce, uk = (*variant, None, False)[:5]
-                name = pc_arm_name(sched, fz, mesh, ce, uk, solo=solo)
+                # (schedule, fuse, mesh) with no compaction/kernel/pgo.
+                v = tuple(variant) + _defaults[len(variant) - 3:]
+                sched, fz, mesh, ce, uk, pg = v
+                name = pc_arm_name(sched, fz, mesh, ce, uk, pg, solo=solo)
                 columns.append(name)
-                pc_meta[name] = (sched, fz, mesh, ce, uk)
+                pc_meta[name] = (sched, fz, mesh, ce, uk, pg)
         else:
             columns.append(arm)
 
@@ -119,12 +132,26 @@ def throughput_sweep(
     # lowering are built once and shared across every batch size in the
     # sweep — only the per-batch-size executors are (re)compiled.
     kernels = {}
-    for name, (sched, fz, mesh, ce, uk) in pc_meta.items():
-        kernels[name] = nuts.make_nuts_kernel(
+    for name, (sched, fz, mesh, ce, uk, pg) in pc_meta.items():
+        kern = nuts.make_nuts_kernel(
             target, settings, backend="pc", max_steps=500_000,
             schedule=sched, fuse=fz, mesh=mesh, verify=verify,
             compact_every=ce, use_kernel=uk,
         )
+        if pg:
+            # Setup-time PGO: trace a profiling run of this variant's own
+            # configuration, distill the block-frequency profile, and
+            # re-lower through the profile-guided passes.  Profiling is
+            # untimed (it happens once, before the sweep) and the
+            # optimized kernel stays bit-exact with the baseline.
+            from repro.obs import block_profile
+
+            ndev = getattr(mesh, "size", mesh) or 1
+            prof_z = 32 if 32 % ndev == 0 else 4 * ndev
+            traced = kern.with_options(trace=PGO_TRACE_CAPACITY)
+            traced(*nuts.initial_state(target, prof_z, eps=eps, seed=0))
+            kern = kern.optimize(block_profile(traced.last_trace))
+        kernels[name] = kern
     for arm in ("local", "local_eager"):
         if arm in arms:
             kernels[arm] = nuts.make_nuts_kernel(
@@ -152,11 +179,11 @@ def throughput_sweep(
     def record(arm: str, z: int, gps: float, **extra) -> float:
         rec = {"arm": arm, "batch": z, "grads_per_sec": gps}
         if arm in pc_meta:
-            sched, fz, mesh, ce, uk = pc_meta[arm]
+            sched, fz, mesh, ce, uk, pg = pc_meta[arm]
             ndev = ndev_of(mesh)
             rec.update(schedule=sched, fuse=fz, mesh=ndev,
                        per_device_batch=z // ndev,
-                       compact_every=ce, use_kernel=uk)
+                       compact_every=ce, use_kernel=uk, pgo=pg)
         rec.update(extra)
         records.append(rec)
         return gps
@@ -215,7 +242,8 @@ def throughput_sweep(
                 extra = {"vm_steps": st.steps, "num_blocks": st.num_blocks,
                          "mean_occupancy": st.mean_occupancy,
                          "mean_lane_occupancy": st.mean_lane_occupancy,
-                         "num_devices": st.num_devices}
+                         "num_devices": st.num_devices,
+                         "masked_updates": st.masked_updates}
             t = best_of(lambda: kern(theta0, eps_arg, keys), repeats)
             row.append(record(arm, z_arm, active * gpl / t, **extra))
         tab.add(*row)
@@ -223,7 +251,8 @@ def throughput_sweep(
 
 
 def parse_pc_variants(schedules: str, fuses: str, meshes: str = "none",
-                      compacts: str = "none", kernels: str = "off") -> tuple:
+                      compacts: str = "none", kernels: str = "off",
+                      pgos: str = "off") -> tuple:
     scheds = [s.strip() for s in schedules.split(",") if s.strip()]
     fz_map = {"on": True, "off": False, "true": True, "false": False}
 
@@ -257,16 +286,18 @@ def parse_pc_variants(schedules: str, fuses: str, meshes: str = "none",
     ms = parse_none_or_int(meshes, "--mesh")
     ces = parse_none_or_int(compacts, "--compact-every")
     uks = parse_onoff(kernels, "--use-kernel")
-    if not scheds or not fzs or not ms or not ces or not uks:
+    pgs = parse_onoff(pgos, "--pgo")
+    if not scheds or not fzs or not ms or not ces or not uks or not pgs:
         raise SystemExit(
-            "--schedule, --fuse, --mesh, --compact-every and --use-kernel "
-            "must each name at least one value (e.g. --schedule "
+            "--schedule, --fuse, --mesh, --compact-every, --use-kernel and "
+            "--pgo must each name at least one value (e.g. --schedule "
             "earliest,popular --fuse on,off --mesh none,8 "
-            "--compact-every none,1 --use-kernel off)"
+            "--compact-every none,1 --use-kernel off --pgo on,off)"
         )
     return tuple(
-        (s, f, m, c, k)
-        for k in uks for c in ces for m in ms for f in fzs for s in scheds
+        (s, f, m, c, k, p)
+        for p in pgs for k in uks for c in ces for m in ms
+        for f in fzs for s in scheds
     )
 
 
@@ -295,6 +326,11 @@ def main(argv=None) -> int:
                     help="comma list of on/off: route stack traffic through "
                          "the Pallas masked-scatter kernels (composes with "
                          "--mesh: one shard-local pallas_call per device)")
+    ap.add_argument("--pgo", default="off",
+                    help="comma list of on/off: re-lower the pc arms "
+                         "through the profile-guided pipeline (a setup-time "
+                         "traced run collects the block-frequency profile; "
+                         "bit-exact, fewer dispatches)")
     ap.add_argument("--per-device-batch", action="store_true",
                     help="treat --batches as per-device: mesh arms scale "
                          "their total batch by the device count "
@@ -316,7 +352,8 @@ def main(argv=None) -> int:
     if args.batches:
         batches = [int(b) for b in args.batches.split(",")]
     pc_variants = parse_pc_variants(args.schedule, args.fuse, args.mesh,
-                                    args.compact_every, args.use_kernel)
+                                    args.compact_every, args.use_kernel,
+                                    args.pgo)
     tab, records = throughput_sweep(
         batches, repeats=args.repeats, pc_variants=pc_variants,
         per_device_batch=args.per_device_batch, verify=args.verify, **kw

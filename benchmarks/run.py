@@ -46,6 +46,9 @@ def main(argv=None) -> int:
     ap.add_argument("--use-kernel", default=None,
                     help="comma list of on/off: Pallas stack kernels for "
                          "the fig5 pc arms")
+    ap.add_argument("--pgo", default=None,
+                    help="comma list of on/off: profile-guided re-lowering "
+                         "for the fig5 pc arms (e.g. 'on,off')")
     ap.add_argument("--per-device-batch", action="store_true",
                     help="fig5: treat --batches as per-device (mesh arms "
                          "scale total batch by device count)")
@@ -85,6 +88,8 @@ def main(argv=None) -> int:
             fig5_args += ["--compact-every", args.compact_every]
         if args.use_kernel:
             fig5_args += ["--use-kernel", args.use_kernel]
+        if args.pgo:
+            fig5_args += ["--pgo", args.pgo]
         if args.mesh:
             fig5_args += ["--mesh", args.mesh]
             if args.per_device_batch:

@@ -215,6 +215,15 @@ class LoweredLiveness:
     def _solve(self) -> None:
         blocks = self.lowered.blocks
         exit_live = set(self.lowered.main_outputs)
+        if self.lowered.state_layout is not None:
+            # A packed main output leaves the VM through its packed array
+            # (the boundary reads ``tops[packed][:, slot]``), so it is the
+            # *packed* variable that must stay live at exit.
+            for o in tuple(exit_live):
+                packed_slot = self.lowered.state_layout.slot_of(o)
+                if packed_slot is not None:
+                    exit_live.discard(o)
+                    exit_live.add(packed_slot[0])
         use_def = [self._block_use_def(b) for b in blocks]
         changed = True
         while changed:

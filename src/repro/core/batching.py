@@ -39,7 +39,7 @@ backend's stack-explicit lowering happens once per *program*; per-batch-size
 executors and per-aval compiled artifacts are memoized under a
 ``(backend, batch_size, schedule, fuse, verify, dce, on_fault,
 detect_nonfinite, lane_step_budget, compact_every, trace, mesh,
-input avals)`` key.  ``cache_info()`` exposes the
+pgo digest, input avals)`` key.  ``cache_info()`` exposes the
 counters so callers (and tests) can prove that a repeat call at the same
 avals performs no re-trace, no re-lower, and no re-compile, and that a call
 at a *new* batch size reuses the lowering.
@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
@@ -123,6 +124,23 @@ class Shared:
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"Shared({self.spec!r})"
+
+
+def _as_profile(pgo: Any):
+    """Normalize the ``pgo=`` knob: None, a ``BlockProfile``, or a path to
+    a profile JSON saved by ``BlockProfile.save`` (loaded here)."""
+    if pgo is None:
+        return None
+    if isinstance(pgo, (str, os.PathLike)):
+        from repro.obs.blockprof import BlockProfile
+
+        return BlockProfile.load(pgo)
+    if hasattr(pgo, "dispatches") and hasattr(pgo, "digest"):
+        return pgo
+    raise TypeError(
+        "pgo= expects a repro.obs.blockprof.BlockProfile (or a path to "
+        f"one saved as JSON), got {type(pgo).__name__}"
+    )
 
 
 def _as_spec(x: Any) -> jax.ShapeDtypeStruct:
@@ -467,11 +485,14 @@ class Stepper:
         """
         iface = self._fn._iface
         main = self._ex.main
-        tops = state["tops"]
         return jax.tree_util.tree_unflatten(
             iface.out_treedef,
             [
-                self.vm.unpermute(state, tops[ir.qualify(main, name)])
+                # read_top is layout-transparent: an output packed into a
+                # grouped array (pgo=) is sliced out of its slot here.
+                self.vm.unpermute(
+                    state, self.vm.read_top(state, ir.qualify(main, name))
+                )
                 for name in iface.out_leaves
             ],
         )
@@ -552,6 +573,7 @@ class AutobatchedFunction:
         lane_step_budget: Optional[int] = None,
         compact_every: Optional[int] = None,
         trace: Any = None,
+        pgo: Any = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -577,6 +599,7 @@ class AutobatchedFunction:
         self.lane_step_budget = lane_step_budget
         self.compact_every = compact_every
         self.trace = trace
+        self.pgo = _as_profile(pgo)
         self.max_depth = max_depth  # None: use the static bound (pc)
         # Resolved lazily (resolving may initialize the jax backend, which
         # a decorator at module import time must not do).
@@ -605,7 +628,7 @@ class AutobatchedFunction:
             mesh=mesh, verify=verify, dce=dce, on_fault=on_fault,
             detect_nonfinite=detect_nonfinite,
             lane_step_budget=lane_step_budget, compact_every=compact_every,
-            trace=trace,
+            trace=trace, pgo=self.pgo,
         )
         # Caches + instrumentation.
         self._lowered: Optional[ir.LoweredProgram] = None
@@ -669,7 +692,11 @@ class AutobatchedFunction:
         as part of this single lowering, so all batch sizes share the
         fused program; ``dce=True`` appends the dead-code-elimination
         pass, and ``verify=True`` runs the lowered-IR verifier between
-        every pass of the pipeline.
+        every pass of the pipeline.  With ``pgo=`` set, the profile-guided
+        passes (``passes.pgo_passes``: trace-driven superblock formation,
+        hot-state layout packing, block reordering) run last — the profile
+        must have been collected from *this* fuse/dce configuration, since
+        its per-block counts are matched against the block graph here.
         """
         if self._lowered is None:
             low = lowering.lower(self.program, verify=self.verify)
@@ -678,6 +705,8 @@ class AutobatchedFunction:
                 post.extend(passes.fusion_passes())
             if self.dce:
                 post.append(passes.DeadCodeElimination())
+            if self.pgo is not None:
+                post.extend(passes.pgo_passes(self.pgo))
             if post:
                 low = passes.PassPipeline(
                     post, verify=self.verify, debug=self.verify
@@ -781,12 +810,29 @@ class AutobatchedFunction:
         clone._pinned = self._pinned
         clone._pinned_funcs = dict(self._pinned_funcs)
         clone._program = self._program
-        if all(
-            kw[k] == self._init_kwargs[k] for k in ("fuse", "dce", "verify")
+        if (
+            all(
+                kw[k] == self._init_kwargs[k]
+                for k in ("fuse", "dce", "verify")
+            )
+            and clone._pgo_digest() == self._pgo_digest()
         ):
             clone._lowered = self._lowered
             clone._depth_report = self._depth_report
         return clone
+
+    def optimize(self, profile: Any) -> "AutobatchedFunction":
+        """A clone re-lowered through the profile-guided pipeline.
+
+        ``profile`` is a :class:`repro.obs.blockprof.BlockProfile` (or a
+        path to one saved as JSON) collected from a traced run of *this*
+        wrapper — typically ``BlockProfile.from_trace(fn.last_trace)``
+        after a call with ``trace=`` on.  Equivalent to
+        ``fn.with_options(pgo=profile)``: the clone shares the traced IR,
+        re-lowers once through ``passes.pgo_passes`` and compiles its own
+        executors (the profile digest is part of the cache key).
+        """
+        return self.with_options(pgo=profile)
 
     def cache_info(self) -> CacheInfo:
         """Executor/compile cache counters.
@@ -879,6 +925,10 @@ class AutobatchedFunction:
 
         return resolve_capacity(self.trace)
 
+    def _pgo_digest(self) -> Optional[str]:
+        """Hashable identity of the guiding profile (None = no PGO)."""
+        return None if self.pgo is None else self.pgo.digest()
+
     def _mesh_key(self) -> Optional[tuple]:
         """Hashable mesh identity (resolved once, at first call time).
 
@@ -913,6 +963,7 @@ class AutobatchedFunction:
             self.compact_every,
             self._trace_key(),
             self._mesh_key(),
+            self._pgo_digest(),
             tuple(
                 (k, tuple(jnp.shape(v)), str(jnp.asarray(v).dtype))
                 for k, v in sorted(inputs.items())
@@ -1138,6 +1189,7 @@ def autobatch(
     lane_step_budget: Optional[int] = None,
     compact_every: Optional[int] = None,
     trace: Any = None,
+    pgo: Any = None,
     registry: Optional[ast_frontend.Namespace] = None,
 ):
     """Autobatch a restricted-Python function or an IR program.
@@ -1208,7 +1260,17 @@ def autobatch(
       and the dispatch sequence are bit-exact with ``trace=None``.  Read
       it via ``fn.last_trace`` / ``Stepper.trace(state)`` as a
       :class:`repro.obs.trace.DispatchTrace`; render timelines with
-      ``repro.obs.timeline`` (see ``docs/observability.md``).
+      ``repro.obs.timeline`` (see ``docs/observability.md``);
+    * ``pgo=`` re-lowers through the profile-guided pipeline
+      (``passes.pgo_passes``): a :class:`repro.obs.blockprof.BlockProfile`
+      (or a path to one saved as JSON) drives trace-driven superblock
+      formation (hot call frames merged or tail-duplicated inline),
+      hot-state layout packing (same-dtype state variables grouped into
+      one packed array, cutting masked updates per dispatch) and block
+      reordering by dispatch frequency.  Outputs stay bit-exact; the
+      profile digest is part of the executor cache key.  Collect a
+      profile from a traced run and apply it with ``fn.optimize(prof)``
+      (``== fn.with_options(pgo=prof)``), or use ``tools/pgo.py``.
 
     Fault containment knobs (pc backend; also part of the cache key):
 
@@ -1247,6 +1309,7 @@ def autobatch(
             lane_step_budget=lane_step_budget,
             compact_every=compact_every,
             trace=trace,
+            pgo=pgo,
             registry=registry,
         )
     if registry is not None:
@@ -1269,7 +1332,7 @@ def autobatch(
         schedule=schedule, fuse=fuse, mesh=mesh, verify=verify, dce=dce,
         on_fault=on_fault, detect_nonfinite=detect_nonfinite,
         lane_step_budget=lane_step_budget, compact_every=compact_every,
-        trace=trace,
+        trace=trace, pgo=pgo,
     )
 
     program: Optional[ir.Program] = None

@@ -147,15 +147,18 @@ def fuse_chains(low: ir.LoweredProgram) -> ir.LoweredProgram:
     # unreachable block can shrink the pushed/popped set).  The block-local
     # re-optimizations — (v) popush pairs newly confined to one superblock,
     # (ii) temp detection on the merged bodies — run as their own passes.
-    stack_vars = frozenset(
-        op.var
-        for blk in new_blocks
-        for op in blk.ops
-        if isinstance(op, (ir.LPush, ir.LPop))
+    stack_vars, temp_vars = lowering.recompute_var_classes(
+        new_blocks, low.main_params, low.main_outputs,
+        state_layout=low.state_layout,
     )
-    temp_vars = lowering.find_temporaries(
-        new_blocks, stack_vars, low.main_params, low.main_outputs
-    )
+
+    # Profile weights survive the renumbering: a merged chain is dispatched
+    # exactly as often as its head block was.
+    block_weights = None
+    if low.block_weights is not None:
+        block_weights = tuple(
+            low.block_weights[i] for i in range(n) if i in index
+        )
 
     return ir.LoweredProgram(
         blocks=new_blocks,
@@ -167,4 +170,6 @@ def fuse_chains(low: ir.LoweredProgram) -> ir.LoweredProgram:
         temp_vars=temp_vars,
         func_entries={f: index[e] for f, e in low.func_entries.items()},
         fused_from=fused_from,
+        block_weights=block_weights,
+        state_layout=low.state_layout,
     )

@@ -254,8 +254,31 @@ def popush_eliminate(lowered: list[ir.LBlock]) -> None:
                     break
 
 
+def recompute_var_classes(
+    blocks, main_params, main_outputs, state_layout=None
+) -> tuple[frozenset[str], frozenset[str]]:
+    """Re-derive ``(stack_vars, temp_vars)`` for a transformed block list.
+
+    One shared implementation for every pass that rewrites blocks (jump-chain
+    fusion, pop-push elimination, temp detection, the PGO passes): the pushed/
+    popped set is re-scanned from the ops and temporaries re-detected, with
+    packed-layout members (``state_layout``) always block-local.
+    """
+    stack_vars = frozenset(
+        op.var
+        for blk in blocks
+        for op in blk.ops
+        if isinstance(op, (ir.LPush, ir.LPop))
+    )
+    temp_vars = find_temporaries(
+        blocks, stack_vars, main_params, main_outputs,
+        state_layout=state_layout,
+    )
+    return stack_vars, temp_vars
+
+
 def find_temporaries(
-    lowered, stack_vars, main_params, main_outputs
+    lowered, stack_vars, main_params, main_outputs, *, state_layout=None
 ) -> frozenset[str]:
     """Paper optimization (ii): variables that never cross a VM iteration.
 
@@ -263,8 +286,15 @@ def find_temporaries(
     (including a terminator read) is preceded by a write within that same
     block.  Such variables are ordinary intermediates of the fused block body
     and need no masked top buffer in VM state.
+
+    Members of a packed ``state_layout`` group are exempt from the
+    main-param/output exclusion: their cross-block value lives in the packed
+    array (written back by the group's ``pack`` prim), so the members
+    themselves are block-local by construction.
     """
     not_temp: set[str] = set(stack_vars) | set(main_params) | set(main_outputs)
+    if state_layout is not None:
+        not_temp -= state_layout.members()
     mentioned: set[str] = set()
     for blk in lowered:
         written: set[str] = set()

@@ -17,6 +17,13 @@ Passes:
   no longer appear anywhere from ``var_specs``, shrinking the masked-update
   footprint the VM pays on every dispatch (VM state is exactly
   ``var_specs - temp_vars``).
+* :class:`ProfileGuidedFusion`, :class:`StateLayoutPacking`,
+  :class:`BlockReordering` — the profile-guided pipeline
+  (:func:`pgo_passes`): trace-driven superblock formation across the
+  pinned call boundaries structural fusion must skip, hot-state layout
+  packing that cuts masked per-dispatch updates, and frequency-ordered
+  block renumbering.  All three consume a measured
+  ``obs.BlockProfile`` (via the seeded ``block_weights`` provenance).
 
 :func:`diagnose` bundles the verifier + analyses into a
 :class:`Diagnostics` report — the backing for ``fn.diagnostics()`` and the
@@ -89,16 +96,12 @@ class PassPipeline:
 def _recompute_var_classes(
     blocks: list[ir.LBlock], low: ir.LoweredProgram
 ) -> tuple[frozenset[str], frozenset[str]]:
-    stack_vars = frozenset(
-        op.var
-        for blk in blocks
-        for op in blk.ops
-        if isinstance(op, (ir.LPush, ir.LPop))
+    # One shared implementation (lowering.recompute_var_classes) for every
+    # block-rewriting pass, including fusion.fuse_chains.
+    return lowering.recompute_var_classes(
+        blocks, low.main_params, low.main_outputs,
+        state_layout=low.state_layout,
     )
-    temp_vars = lowering.find_temporaries(
-        blocks, stack_vars, low.main_params, low.main_outputs
-    )
-    return stack_vars, temp_vars
 
 
 def _copy_blocks(blocks: Sequence[ir.LBlock]) -> list[ir.LBlock]:
@@ -217,6 +220,397 @@ class DeadCodeElimination:
             if isinstance(blk.term, ir.LBranch):
                 vs.add(blk.term.var)
         return vs
+
+
+# --------------------------------------------------------------------------
+# Profile-guided optimization passes (ROADMAP item 5)
+# --------------------------------------------------------------------------
+
+
+def _frame_blocks(blocks: Sequence[ir.LBlock], entry: int) -> list[int]:
+    """Blocks of the frame rooted at ``entry``: the intraprocedural CFG
+    closure following jumps, branches and call *fallthroughs* (an
+    ``LPushJump`` continues at its return site; the callee is another
+    frame).  Returned in discovery order, entry first."""
+    frame: list[int] = []
+    seen: set[int] = set()
+    stack = [entry]
+    while stack:
+        b = stack.pop()
+        if b in seen:
+            continue
+        seen.add(b)
+        frame.append(b)
+        t = blocks[b].term
+        if isinstance(t, ir.LJump):
+            stack.append(t.target)
+        elif isinstance(t, ir.LBranch):
+            stack.extend((t.true, t.false))
+        elif isinstance(t, ir.LPushJump):
+            stack.append(t.ret)
+    return frame
+
+
+@dataclass
+class ProfileGuidedFusion:
+    """Trace-driven superblock formation (the PGO tentpole, ROADMAP 5).
+
+    Consumes a ``BlockProfile`` measured on *this exact program* (the
+    profile's ``num_blocks`` must match) and rewrites the hot call
+    boundaries that structural :class:`JumpChainFusion` must skip because
+    their blocks are pinned (function entries and return sites are
+    multi-predecessor joins entered dynamically):
+
+    * a function with **exactly one call site** is merged into its caller's
+      frame: the ``LPushJump`` becomes a plain ``LJump``, every ``LReturn``
+      of the frame becomes an ``LJump`` to the (now unique) return site,
+      and the function entry is dropped from ``func_entries`` — un-pinning
+      both blocks so the follow-up :class:`JumpChainFusion` absorbs them
+      into superblocks;
+    * a **hot call site** of a multi-site function gets the callee frame
+      *tail-duplicated* (frame-copy inlining): the copy's returns jump
+      straight to this site's return address, the copy's internal calls
+      still target the original entries (recursion-safe), and the original
+      frame keeps serving the remaining sites.  Gated by
+      ``max_inline_blocks`` so a large frame is never duplicated.
+
+    Also seeds ``LoweredProgram.block_weights`` with the profile's
+    per-block dispatch counts — the hotness signal :class:`StateLayoutPacking`
+    and :class:`BlockReordering` consume, propagated by every later
+    renumbering pass.
+
+    Bit-exactness: per-lane primitive sequences are unchanged — only pc
+    bookkeeping (one less pc push per merged/inlined call) and block
+    boundaries move, exactly like structural fusion.
+    """
+
+    profile: object  # obs.BlockProfile (duck-typed: core must not import obs)
+    min_count: int = 1
+    max_inline_blocks: int = 8
+    name: str = "profile-guided-fusion"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        prof = self.profile
+        n = len(lowered.blocks)
+        if prof.num_blocks != n:
+            raise ValueError(
+                f"profile was measured on a {prof.num_blocks}-block program "
+                f"but this program has {n} blocks — re-profile with the same "
+                "schedule/fuse/dce settings the optimized run will use"
+            )
+        blocks = _copy_blocks(lowered.blocks)
+        weights = [int(prof.dispatches[b]) for b in range(n)]
+        func_entries = dict(lowered.func_entries)
+        fused_from = (
+            dict(lowered.fused_from)
+            if lowered.fused_from is not None else None
+        )
+        entry_of = {e: f for f, e in func_entries.items()}
+        main = entry_of[lowered.entry]
+
+        def call_sites(entry: int) -> list[int]:
+            return [
+                i for i, blk in enumerate(blocks)
+                if isinstance(blk.term, ir.LPushJump)
+                and blk.term.target == entry
+            ]
+
+        # ---- 1. Merge single-call-site functions into their caller. ----
+        for fname, entry in sorted(lowered.func_entries.items()):
+            if fname == main:
+                continue
+            sites = call_sites(entry)
+            if len(sites) != 1:
+                continue
+            site = sites[0]
+            frame = _frame_blocks(blocks, entry)
+            if site in frame:  # a self-recursive only-caller: leave it
+                continue
+            if weights[site] < self.min_count:
+                continue
+            ret = blocks[site].term.ret
+            for b in frame:
+                if isinstance(blocks[b].term, ir.LReturn):
+                    blocks[b].term = ir.LJump(ret)
+            blocks[site].term = ir.LJump(entry)
+            del func_entries[fname]
+
+        # ---- 2. Tail-duplicate small callee frames at hot call sites. ----
+        for fname, entry in sorted(lowered.func_entries.items()):
+            if fname == main or fname not in func_entries:
+                continue
+            frame = _frame_blocks(blocks, entry)
+            if len(frame) > self.max_inline_blocks:
+                continue
+            sites = call_sites(entry)
+            if len(sites) < 2:
+                continue
+            for site in sites:
+                if weights[site] < self.min_count or site in frame:
+                    continue
+                ret = blocks[site].term.ret
+                mapping = {b: len(blocks) + k for k, b in enumerate(frame)}
+                for b in frame:
+                    src = blocks[b]
+                    t = src.term
+                    if isinstance(t, ir.LJump):
+                        t = ir.LJump(mapping[t.target])
+                    elif isinstance(t, ir.LBranch):
+                        t = ir.LBranch(var=t.var, true=mapping[t.true],
+                                       false=mapping[t.false])
+                    elif isinstance(t, ir.LPushJump):
+                        # The callee entry stays original (recursion-safe);
+                        # only the intraframe return site is remapped.
+                        t = ir.LPushJump(target=t.target, ret=mapping[t.ret])
+                    else:  # LReturn: the caller no longer pushes a ret pc
+                        t = ir.LJump(ret)
+                    blocks.append(ir.LBlock(
+                        ops=list(src.ops), term=t,
+                        label=f"{src.label}@inline{site}",
+                    ))
+                    # The copy runs as often as its call site did; real
+                    # counts would need a re-profile, this is the estimate.
+                    weights.append(min(weights[b], weights[site]))
+                    if fused_from is not None:
+                        fused_from[len(blocks) - 1] = fused_from[b]
+                blocks[site].term = ir.LJump(mapping[entry])
+
+        # Drop functions no remaining call site targets: their entries are
+        # un-pinned so the now-private frames can be absorbed (or dropped).
+        for fname, entry in list(func_entries.items()):
+            if fname != main and not call_sites(entry):
+                del func_entries[fname]
+
+        stack_vars, temp_vars = lowering.recompute_var_classes(
+            blocks, lowered.main_params, lowered.main_outputs,
+            state_layout=lowered.state_layout,
+        )
+        rewritten = ir.dataclass_replace(
+            lowered,
+            blocks=blocks,
+            func_entries=func_entries,
+            fused_from=fused_from,
+            stack_vars=stack_vars,
+            temp_vars=temp_vars,
+            block_weights=tuple(weights),
+        )
+        # Re-fuse immediately: the rewrites above un-pin entries and return
+        # sites (and can leave whole inlined-out frames unreachable), so the
+        # chain fusion that concatenates the new superblocks — and compacts
+        # the dead frames away — is part of this pass's contract.  It also
+        # propagates ``block_weights`` (a merged chain runs as often as its
+        # head) and composes ``fused_from``.
+        return fusion.fuse_chains(rewritten)
+
+
+@dataclass
+class StateLayoutPacking:
+    """Pack hot same-spec VM state members into grouped contiguous arrays.
+
+    Every masked ``_masked(...)`` whole-state update the VM performs per
+    dispatch costs one ``jnp.where`` over a ``[batch, ...]`` buffer.  This
+    pass groups state variables with identical ``(shape, dtype)`` into one
+    packed ``(k,) + shape`` array per group (slot order = profile write
+    weight, hottest first): inside each block that mentions members, an
+    ``unpack`` prim materializes them as block-local temps and — iff any
+    member was written — a single ``pack`` prim writes the group back, so a
+    block that used to pay ``m`` masked updates pays one per touched group.
+    The mapping is recorded as ``LoweredProgram.state_layout`` and every VM
+    boundary (init/inject/park/outputs/stepper, sharding, kernels) reads
+    ``tops[packed][:, slot]`` through it.
+    """
+
+    min_group: int = 2
+    name: str = "state-layout-packing"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        if lowered.state_layout is not None:
+            raise ValueError("state layout is already packed")
+        import jax
+
+        # Candidates: plain state vars (stack vars need their own stacks;
+        # temps never enter VM state in the first place).
+        weights = lowered.block_weights
+        mentions: dict[str, int] = {}
+        writes_w: dict[str, int] = {}
+        for i, blk in enumerate(lowered.blocks):
+            w = int(weights[i]) if weights is not None else 1
+            for op in blk.ops:
+                for r in ir.prim_reads(op):
+                    mentions[r] = mentions.get(r, 0) + 1
+                for v in ir.prim_writes(op):
+                    mentions[v] = mentions.get(v, 0) + 1
+                    writes_w[v] = writes_w.get(v, 0) + w
+            if isinstance(blk.term, ir.LBranch):
+                mentions[blk.term.var] = mentions.get(blk.term.var, 0) + 1
+        by_spec: dict[tuple, list[str]] = {}
+        for v in sorted(lowered.var_specs):
+            if lowered.var_class(v) != "state" or v not in mentions:
+                continue
+            spec = lowered.var_specs[v]
+            by_spec.setdefault(
+                (tuple(spec.shape), str(spec.dtype)), []
+            ).append(v)
+
+        groups: dict[str, tuple[str, ...]] = {}
+        var_specs = dict(lowered.var_specs)
+        for (shape, _dtype), members in sorted(by_spec.items()):
+            if len(members) < self.min_group:
+                continue
+            members = sorted(
+                members, key=lambda v: (-writes_w.get(v, 0), v)
+            )
+            packed = f"%pgo/pack{len(groups)}"
+            spec = lowered.var_specs[members[0]]
+            groups[packed] = tuple(members)
+            var_specs[packed] = jax.ShapeDtypeStruct(
+                (len(members),) + tuple(spec.shape), spec.dtype
+            )
+        if not groups:
+            return lowered
+        layout = ir.StateLayout(groups=groups)
+        member_group = {
+            m: packed for packed, ms in groups.items() for m in ms
+        }
+
+        def unpack_prim(packed: str, members: tuple[str, ...]) -> ir.LPrim:
+            k = len(members)
+            return ir.LPrim(
+                outs=members,
+                fn=lambda p, _k=k: tuple(p[i] for i in range(_k)),
+                ins=(packed,),
+                name="unpack",
+            )
+
+        def pack_prim(packed: str, members: tuple[str, ...]) -> ir.LPrim:
+            import jax.numpy as jnp
+
+            return ir.LPrim(
+                outs=(packed,),
+                fn=lambda *vals: jnp.stack(vals),
+                ins=members,
+                name="pack",
+            )
+
+        blocks = _copy_blocks(lowered.blocks)
+        for blk in blocks:
+            touched: set[str] = set()
+            written: set[str] = set()
+            for op in blk.ops:
+                for r in ir.prim_reads(op):
+                    if r in member_group:
+                        touched.add(member_group[r])
+                for v in ir.prim_writes(op):
+                    if v in member_group:
+                        touched.add(member_group[v])
+                        written.add(member_group[v])
+            if (
+                isinstance(blk.term, ir.LBranch)
+                and blk.term.var in member_group
+            ):
+                touched.add(member_group[blk.term.var])
+            if not touched:
+                continue
+            pre = [unpack_prim(p, groups[p]) for p in sorted(touched)]
+            post = [pack_prim(p, groups[p]) for p in sorted(written)]
+            blk.ops = pre + blk.ops + post
+
+        stack_vars, temp_vars = lowering.recompute_var_classes(
+            blocks, lowered.main_params, lowered.main_outputs,
+            state_layout=layout,
+        )
+        return ir.dataclass_replace(
+            lowered,
+            blocks=blocks,
+            var_specs=var_specs,
+            stack_vars=stack_vars,
+            temp_vars=temp_vars,
+            state_layout=layout,
+        )
+
+
+@dataclass
+class BlockReordering:
+    """Renumber blocks by profile dispatch frequency, hottest first.
+
+    The ``earliest``/``lookahead`` scoring and the ``sweep`` schedule all
+    iterate or argmin over block indices, so placing the hot blocks at the
+    low indices makes every scheduler touch them first.  Pure renumbering:
+    terminators, entries and provenance are remapped, per-lane execution
+    is unchanged, and the permutation is recorded as
+    ``LoweredProgram.block_order`` (``block_order[new] = old``).
+    """
+
+    name: str = "block-reordering"
+
+    def run(self, lowered: ir.LoweredProgram) -> ir.LoweredProgram:
+        weights = lowered.block_weights
+        if weights is None:
+            return lowered  # unprofiled: nothing to order by
+        n = len(lowered.blocks)
+        perm = sorted(range(n), key=lambda b: (-weights[b], b))
+        if perm == list(range(n)):
+            return lowered
+        new_of = {old: new for new, old in enumerate(perm)}
+
+        def remap(t: ir.LTerminator) -> ir.LTerminator:
+            if isinstance(t, ir.LJump):
+                return ir.LJump(new_of[t.target])
+            if isinstance(t, ir.LBranch):
+                return ir.LBranch(var=t.var, true=new_of[t.true],
+                                  false=new_of[t.false])
+            if isinstance(t, ir.LPushJump):
+                return ir.LPushJump(target=new_of[t.target],
+                                    ret=new_of[t.ret])
+            return t
+
+        blocks = [
+            ir.LBlock(
+                ops=list(lowered.blocks[old].ops),
+                term=remap(lowered.blocks[old].term),
+                label=lowered.blocks[old].label,
+            )
+            for old in perm
+        ]
+        fused_from = None
+        if lowered.fused_from is not None:
+            fused_from = {
+                new: lowered.fused_from[old] for new, old in enumerate(perm)
+            }
+        if lowered.block_order is not None:  # compose with a prior reorder
+            order = tuple(lowered.block_order[old] for old in perm)
+        else:
+            order = tuple(perm)
+        return ir.dataclass_replace(
+            lowered,
+            blocks=blocks,
+            entry=new_of[lowered.entry],
+            func_entries={
+                f: new_of[e] for f, e in lowered.func_entries.items()
+            },
+            fused_from=fused_from,
+            block_weights=tuple(weights[old] for old in perm),
+            block_order=order,
+        )
+
+
+def pgo_passes(
+    profile, *, min_count: int = 1, max_inline_blocks: int = 8
+) -> tuple[Pass, ...]:
+    """The profile-guided pipeline appended after the structural passes:
+    hot-path superblock formation (which re-fuses the un-pinned
+    boundaries), block-local cleanups over the new superblocks,
+    state-layout packing, and the final frequency renumbering."""
+    return (
+        ProfileGuidedFusion(
+            profile, min_count=min_count,
+            max_inline_blocks=max_inline_blocks,
+        ),
+        PopPushElimination(),
+        TempDetection(),
+        StateLayoutPacking(),
+        BlockReordering(),
+    )
 
 
 def lowering_passes() -> tuple[Pass, ...]:

@@ -405,6 +405,12 @@ class SchedulerStats:
     mean_lane_occupancy: float = float("nan")
     # The compaction cadence this run used (None = no compaction).
     compact_every: Optional[int] = None
+    # Total masked whole-state top updates the run performed:
+    # sum over blocks of block_exec[b] * (static masked-write count of
+    # block b).  Requires collect_block_stats; None otherwise.  This is
+    # the quantity StateLayoutPacking shrinks — packed members write one
+    # grouped array instead of one `_masked` update per member.
+    masked_updates: Optional[int] = None
 
 
 @dataclass
@@ -515,6 +521,21 @@ class ProgramCounterVM:
             for v in sorted(lowered.var_specs)
             if v not in lowered.temp_vars
         ]
+        # Static count of masked whole-state top updates per dispatch of
+        # each block: one per LPrim output that lands in VM state plus one
+        # per push/pop top write.  Multiplied by block_exec post-run to
+        # give SchedulerStats.masked_updates (the metric layout packing
+        # cuts: packed members become temps, so a block writes the one
+        # grouped array instead of one masked top per member).
+        self._masked_writes = [
+            sum(
+                len([o for o in op.outs if o not in lowered.temp_vars])
+                if isinstance(op, ir.LPrim)
+                else 1
+                for op in blk.ops
+            )
+            for blk in lowered.blocks
+        ]
         self._block_fns = [
             self._make_block_fn(i, blk) for i, blk in enumerate(lowered.blocks)
         ]
@@ -547,6 +568,24 @@ class ProgramCounterVM:
     # State construction
     # ------------------------------------------------------------------
 
+    def _layout_slot(self, v: str) -> Optional[tuple[str, int]]:
+        """``(packed_var, slot)`` when ``v`` lives in a packed layout group
+        (see ``ir.StateLayout``), else None."""
+        layout = self.lowered.state_layout
+        return None if layout is None else layout.slot_of(v)
+
+    def read_top(self, state: dict[str, Any], v: str) -> Array:
+        """Current ``[batch, ...]`` value of a cross-block variable, in row
+        order.  Layout-transparent: a packed member is sliced out of its
+        grouped array, so inject/park/outputs/Stepper callers never see the
+        packed layout.  (Use :meth:`unpermute` for caller lane order.)
+        """
+        slot = self._layout_slot(v)
+        if slot is None:
+            return state["tops"][v]
+        packed, idx = slot
+        return state["tops"][packed][:, idx]
+
     def init_state(self, inputs: dict[str, Array]) -> dict[str, Any]:
         cfg = self.config
         z, d = cfg.batch_size, cfg.max_depth
@@ -567,7 +606,15 @@ class ProgramCounterVM:
                     f"input {p!r}: expected batched shape "
                     f"{(z,) + tuple(lp.var_specs[p].shape)}, got {x.shape}"
                 )
-            tops[p] = x.astype(lp.var_specs[p].dtype)
+            x = x.astype(lp.var_specs[p].dtype)
+            slot = self._layout_slot(p)
+            if slot is None:
+                tops[p] = x
+            else:
+                # Packed-layout member: the param's cross-block home is a
+                # slot of the grouped array (the member itself is a temp).
+                packed, idx = slot
+                tops[packed] = tops[packed].at[:, idx].set(x)
         pc_stack = jnp.full((d, z), lp.exit_index, _I32)
         state = {
             "pc_top": jnp.full((z,), lp.entry, _I32),
@@ -1288,7 +1335,17 @@ class ProgramCounterVM:
         for v in self._state_vars:
             tops[v] = _masked(mask, jnp.zeros_like(tops[v]), tops[v])
         for p in lp.main_params:
-            tops[p] = _masked(mask, fresh[p], tops[p])
+            slot = self._layout_slot(p)
+            if slot is None:
+                tops[p] = _masked(mask, fresh[p], tops[p])
+            else:
+                # Packed-layout member: masked write into the param's slot
+                # of the grouped array (already zeroed above with the rest
+                # of VM state).
+                packed, idx = slot
+                tops[packed] = tops[packed].at[:, idx].set(
+                    _masked(mask, fresh[p], tops[packed][:, idx])
+                )
         out["tops"] = tops
         out["stacks"] = {
             v: col_masked(jnp.zeros_like(s), s)
@@ -1339,7 +1396,7 @@ class ProgramCounterVM:
         def restore(x):
             return x if (x is None or inv is None) else jnp.take(x, inv, 0)
 
-        outputs = {o: restore(state["tops"][o]) for o in lp.main_outputs}
+        outputs = {o: restore(self.read_top(state, o)) for o in lp.main_outputs}
         done = state["pc_top"] >= lp.exit_index
         if self.config.on_fault == "quarantine":
             # A quarantined lane will never reach the exit block; the run
@@ -1352,6 +1409,7 @@ class ProgramCounterVM:
         mean_occ = float("nan")
         mean_lane_occ = float("nan")
         steps = None
+        masked_updates = None
         if block_exec is not None:
             be = jax.device_get(block_exec)
             ba = jax.device_get(block_active)
@@ -1371,6 +1429,9 @@ class ProgramCounterVM:
             if tile_cap:
                 mean_occ = float(ba.sum()) / tile_cap
             steps = int(jax.device_get(state["steps"]))
+            masked_updates = sum(
+                int(be[b]) * w for b, w in enumerate(self._masked_writes)
+            )
         sched = SchedulerStats(
             schedule=self.config.schedule,
             fused=lp.fused_from is not None,
@@ -1381,6 +1442,7 @@ class ProgramCounterVM:
             num_devices=self.mesh.size if self.mesh is not None else 1,
             mean_lane_occupancy=mean_lane_occ,
             compact_every=self.config.compact_every,
+            masked_updates=masked_updates,
         )
         return VMResult(
             outputs=outputs,

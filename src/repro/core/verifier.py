@@ -22,7 +22,14 @@ program while lowering, fusion and the other pipeline passes rewrite it.
   match their destination, and every ``LPrim`` agrees with its declared
   output specs under ``jax.eval_shape``.
 * **Provenance** — ``fused_from`` covers every block with a non-empty
-  source chain, and no two blocks claim the same chain head.
+  source chain, and no two blocks claim the same chain head (unless the
+  profile-guided inliner legitimately tail-duplicated whole frames).
+* **Layout packing** — every ``state_layout`` group packs ≥ 2 same-spec,
+  non-stack member variables into a packed array whose spec is
+  ``(k,) + member_shape``; members are block-local temps, belong to
+  exactly one group, and the packed array itself is VM state.
+* **Reordering** — ``block_order``, when present, is a permutation of
+  ``0..n-1`` (the ``BlockReordering`` provenance).
 
 ``PassPipeline`` (passes.py) runs :func:`verify` between passes so a
 broken transform is caught at the pass that produced it, not at runtime.
@@ -52,6 +59,8 @@ def verify(lowered: ir.LoweredProgram, *, check_specs: bool = True) -> None:
     if check_specs:
         _check_specs(lowered)
     _check_provenance(lowered)
+    _check_layout(lowered)
+    _check_reorder(lowered)
 
 
 def _fail(msg: str) -> None:
@@ -153,6 +162,11 @@ def _check_var_classes(lowered: ir.LoweredProgram) -> None:
     if overlap:
         _fail(f"temp_vars overlap stack_vars: {sorted(overlap)}")
     io = set(lowered.main_params) | set(lowered.main_outputs)
+    if lowered.state_layout is not None:
+        # Packed members are block-local by construction: their cross-block
+        # value lives in the packed array, so a main param/output member is
+        # legitimately a temp (the VM boundary reads/writes the packed slot).
+        io -= lowered.state_layout.members()
     bad_io = lowered.temp_vars & io
     if bad_io:
         _fail(f"temp_vars include main params/outputs: {sorted(bad_io)}")
@@ -287,10 +301,86 @@ def _check_provenance(lowered: ir.LoweredProgram) -> None:
         if len(set(srcs)) != len(srcs):
             _fail(f"fused_from[{b}] repeats a source block: {srcs}")
         head = srcs[0]
-        if head in heads:
+        if head in heads and lowered.block_weights is None:
+            # Structural fusion never duplicates a chain head; the
+            # profile-guided inliner (which seeds block_weights) does —
+            # a tail-duplicated frame copy shares its source chain.
             _fail(
                 f"blocks {heads[head]} and {b} both claim original block "
                 f"{head} as their chain head (provenance is not a "
                 "partition)"
             )
         heads[head] = b
+
+
+# --------------------------------------------------------------------------
+# PGO invariants: state-layout packing + block reordering
+# --------------------------------------------------------------------------
+
+
+def _check_layout(lowered: ir.LoweredProgram) -> None:
+    layout = lowered.state_layout
+    if layout is None:
+        return
+    seen: dict[str, str] = {}
+    for packed, members in layout.groups.items():
+        if len(members) < 2:
+            _fail(
+                f"layout group {packed!r} packs {len(members)} member(s); "
+                "a group needs >= 2 to cut masked updates"
+            )
+        if packed not in lowered.var_specs:
+            _fail(f"packed variable {packed!r} has no var_specs entry")
+        if packed in lowered.temp_vars or packed in lowered.stack_vars:
+            _fail(
+                f"packed variable {packed!r} must be VM state "
+                f"(class {lowered.var_class(packed)!r})"
+            )
+        pspec = lowered.var_specs[packed]
+        mspecs = []
+        for m in members:
+            if m in seen:
+                _fail(
+                    f"layout member {m!r} belongs to both {seen[m]!r} "
+                    f"and {packed!r}"
+                )
+            seen[m] = packed
+            if m in lowered.stack_vars:
+                _fail(f"layout member {m!r} is a stack variable")
+            if m not in lowered.temp_vars:
+                _fail(
+                    f"layout member {m!r} must be a block-local temp "
+                    f"(class {lowered.var_class(m)!r})"
+                )
+            if m not in lowered.var_specs:
+                _fail(f"layout member {m!r} has no var_specs entry")
+            mspecs.append(lowered.var_specs[m])
+        first = mspecs[0]
+        for m, s in zip(members, mspecs):
+            if not _specs_eq(s, first):
+                _fail(
+                    f"layout group {packed!r} mixes member specs: "
+                    f"{members[0]!r} is {first} but {m!r} is {s}"
+                )
+        want = (len(members),) + tuple(first.shape)
+        if tuple(pspec.shape) != want or pspec.dtype != first.dtype:
+            _fail(
+                f"packed variable {packed!r} spec {pspec} does not match "
+                f"(k,) + member shape {want} / dtype {first.dtype}"
+            )
+
+
+def _check_reorder(lowered: ir.LoweredProgram) -> None:
+    n = len(lowered.blocks)
+    if lowered.block_weights is not None and len(lowered.block_weights) != n:
+        _fail(
+            f"block_weights has {len(lowered.block_weights)} entries for "
+            f"{n} blocks"
+        )
+    order = lowered.block_order
+    if order is None:
+        return
+    if sorted(order) != list(range(n)):
+        _fail(
+            f"block_order is not a permutation of 0..{n - 1}: {order}"
+        )

@@ -324,6 +324,7 @@ def make_nuts_kernel(
     mesh=None,
     verify: bool = False,
     compact_every: Optional[int] = None,
+    pgo=None,
 ) -> batching.AutobatchedFunction:
     """The public NUTS entry point, on the decorator-first pytree API.
 
@@ -349,6 +350,10 @@ def make_nuts_kernel(
     ``compact_every=k`` turns on occupancy-aware lane compaction every
     ``k`` VM dispatches — tree-depth divergence between chains is exactly
     the fragmentation compaction recovers; chains stay bit-identical.
+    ``pgo=`` re-lowers through the profile-guided pipeline from a
+    :class:`repro.obs.blockprof.BlockProfile` (or a saved profile path)
+    collected on a traced run of the same kernel — still bit-exact, fewer
+    dispatches (see ``tools/pgo.py``).
     """
     program = build_nuts_program(target, settings)
     vec = spec((target.dim,), jnp.float32)
@@ -366,6 +371,7 @@ def make_nuts_kernel(
         mesh=mesh,
         verify=verify,
         compact_every=compact_every,
+        pgo=pgo,
     )
 
 

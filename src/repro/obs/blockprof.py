@@ -14,6 +14,7 @@ lands.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 from dataclasses import dataclass
 
@@ -21,8 +22,11 @@ import numpy as np
 
 from .trace import SWEEP_BLOCK, DispatchTrace
 
-#: Version tag of the block-frequency profile JSON format.
-PROFILE_VERSION = 1
+#: Version tag of the block-frequency profile JSON format.  Version 2
+#: added the exact ``total_active`` integer per block (version 1 only
+#: stored the rounded ``mean_residents``, so ``load()`` reconstructs the
+#: totals approximately for old artifacts).
+PROFILE_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -84,6 +88,7 @@ class BlockProfile:
                 {
                     "block": b,
                     "dispatches": int(self.dispatches[b]),
+                    "total_active": int(self.total_active[b]),
                     "mean_residents": round(float(mean_res[b]), 6),
                     "occupancy": round(float(occ[b]), 6),
                     "wasted_slots": int(self.wasted_slots[b]),
@@ -100,6 +105,68 @@ class BlockProfile:
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump(self.to_json(), f, indent=2, allow_nan=False)
+
+    @classmethod
+    def from_json(cls, data: dict) -> "BlockProfile":
+        """Inverse of :meth:`to_json`, with a schema-version check.
+
+        Accepts the current format and version 1 (which lacked the exact
+        ``total_active`` integer; it is reconstructed from the rounded
+        ``mean_residents``, so v1 round-trips are approximate).  Rejects
+        missing or newer versions so a profile written by a later format
+        never silently misguides the PGO pipeline.
+        """
+        version = data.get("version")
+        if version is None:
+            raise ValueError(
+                "block profile JSON has no 'version' field "
+                "(not a saved BlockProfile?)"
+            )
+        if not 1 <= int(version) <= PROFILE_VERSION:
+            raise ValueError(
+                f"unsupported block profile version {version} "
+                f"(this build reads versions 1..{PROFILE_VERSION})"
+            )
+        nb = int(data["num_blocks"])
+        dispatches = np.zeros((nb,), np.int64)
+        total_active = np.zeros((nb,), np.int64)
+        total_tile = np.zeros((nb,), np.int64)
+        transitions = np.zeros((nb, nb), np.int64)
+        for row in data["blocks"]:
+            b = int(row["block"])
+            dispatches[b] = int(row["dispatches"])
+            if "total_active" in row:
+                total_active[b] = int(row["total_active"])
+            else:  # v1: reconstruct from the rounded per-dispatch mean
+                total_active[b] = round(
+                    float(row["mean_residents"]) * dispatches[b]
+                )
+            total_tile[b] = total_active[b] + int(row["wasted_slots"])
+        for t in data["transitions"]:
+            transitions[int(t["src"]), int(t["dst"])] = int(t["count"])
+        return cls(
+            schedule=str(data["schedule"]),
+            num_blocks=nb,
+            batch_size=int(data["batch_size"]),
+            events=int(data["events"]),
+            dropped=int(data["dropped"]),
+            dispatches=dispatches,
+            total_active=total_active,
+            total_tile_capacity=total_tile,
+            transitions=transitions,
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "BlockProfile":
+        """Read a profile saved by :meth:`save` (see :meth:`from_json`)."""
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    def digest(self) -> str:
+        """Stable content hash (the executor-cache key component)."""
+        payload = json.dumps(self.to_json(), sort_keys=True,
+                             separators=(",", ":"), allow_nan=False)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
 def block_profile(trace: DispatchTrace) -> BlockProfile:

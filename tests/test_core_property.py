@@ -441,6 +441,96 @@ def test_compaction_segmented_quarantine_matches_uncompacted(seg):
             assert st_.steps(state) == base_steps, tag
 
 
+@pytest.mark.parametrize(
+    "schedule,fuse",
+    [
+        ("earliest", True),
+        ("lookahead", True),
+        ("sweep", True),
+        ("popular", False),
+    ],
+)
+def test_pgo_matrix_matches_unoptimized(schedule, fuse):
+    """The ISSUE 10 tentpole contract: re-lowering through the
+    profile-guided pipeline (trace-driven superblocks, hot-state layout
+    packing, frequency block reordering) is a pure optimization.  For
+    every mesh x compact_every x use_kernel cell — and the segmented
+    Stepper — outputs and per-lane fault codes must be bit-exact with the
+    un-optimized run, and the dispatch count must agree across every PGO
+    cell (the optimized program is one program; only its schedule-free
+    semantics are shared with the baseline)."""
+    import jax
+
+    from repro.obs import block_profile
+
+    rng = np.random.default_rng(31)
+    prog = _Gen(rng).build()
+    pairs = [(int(rng.integers(0, 5)), int(rng.integers(-50, 51)))
+             for _ in range(8)]
+    n = np.array([i[0] for i in pairs], np.int32)
+    x = np.array([i[1] for i in pairs], np.int32)
+    base_fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule=schedule, fuse=fuse, trace=True,
+    )
+    base = np.asarray(base_fn(n, x)["out"])
+    base_faults = np.asarray(base_fn.last_result.fault_code)
+    prof = block_profile(base_fn.last_trace)
+    meshes = [None] + ([2] if jax.device_count() >= 2 else [])
+    # The use_kernel cell is pallas-interpret on CPU (slow), so only the
+    # earliest arm carries it; every arm runs the compaction cells.
+    cells = [(None, False), (1, False)]
+    if schedule == "earliest":
+        cells.append((None, True))
+    pgo_steps = None
+    for mesh in meshes:
+        for ce, use_kernel in cells:
+            fn = batching.autobatch(
+                prog, backend="pc", max_depth=64, max_steps=200_000,
+                schedule=schedule, fuse=fuse, mesh=mesh,
+                compact_every=ce, use_kernel=use_kernel,
+                verify=True, pgo=prof,
+            )
+            tag = (f"pgo[{schedule},fuse={fuse},mesh={mesh},"
+                   f"compact={ce},kernel={use_kernel}]")
+            np.testing.assert_array_equal(
+                np.asarray(fn(n, x)["out"]), base,
+                err_msg=f"{tag} outputs != un-optimized baseline",
+            )
+            res = fn.last_result
+            np.testing.assert_array_equal(
+                np.asarray(res.fault_code), base_faults,
+                err_msg=f"{tag} fault codes != un-optimized baseline",
+            )
+            if pgo_steps is None:
+                pgo_steps = int(res.steps)
+            assert int(res.steps) == pgo_steps, (
+                f"{tag}: step count {int(res.steps)} != other PGO cells "
+                f"{pgo_steps} — the optimized dispatch sequence drifted"
+            )
+    # Segmented execution sees the same packed layout through the Stepper
+    # boundary (outputs read tops[packed][:, slot]).
+    fn = batching.autobatch(
+        prog, backend="pc", max_depth=64, max_steps=200_000,
+        schedule=schedule, fuse=fuse, verify=True, pgo=prof,
+    )
+    st_ = fn.stepper(n, x)
+    state = st_.init()
+    budget = 0
+    while not st_.done(state):
+        state = st_.step(state, 5)
+        budget += 1
+        assert budget < 200_000
+    np.testing.assert_array_equal(
+        np.asarray(st_.result(state)["out"]), base,
+        err_msg=f"pgo[{schedule},fuse={fuse},seg=5] != baseline",
+    )
+    assert st_.steps(state) == pgo_steps
+    np.testing.assert_array_equal(
+        np.asarray(st_.lane_done(state)), np.ones(len(n), bool),
+    )
+
+
 def _deep_program():
     """Unbounded-depth recursion: overflows any small max_depth for n>=d."""
     pb = frontend.ProgramBuilder()

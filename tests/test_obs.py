@@ -24,6 +24,7 @@ from repro.obs import (
     validate_perfetto,
     write_perfetto,
 )
+from repro.obs.blockprof import PROFILE_VERSION
 from repro.obs.timeline import segment_tracks
 from repro.obs.trace import SWEEP_BLOCK, resolve_capacity
 from tests.test_core_property import _Gen
@@ -253,7 +254,7 @@ def test_block_profile_consistent_with_trace(tmp_path):
     prof.save(path)
     with open(path) as f:
         obj = json.load(f, parse_constant=lambda c: pytest.fail(c))
-    assert obj["version"] == 1
+    assert obj["version"] == PROFILE_VERSION
     assert len(obj["blocks"]) == tr.num_blocks
     assert sum(b["dispatches"] for b in obj["blocks"]) == len(tr)
 

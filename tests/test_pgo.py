@@ -1,0 +1,283 @@
+"""End-to-end tests for the profile-guided optimization pipeline.
+
+The ISSUE 10 tentpole contract: tracing a run, distilling the dispatch
+stream into a :class:`BlockProfile` and re-lowering through
+``passes.pgo_passes`` (trace-driven superblock formation, hot-state
+layout packing, frequency block reordering) must keep outputs bit-exact
+while *strictly* reducing both the dispatch count and the number of
+masked whole-state updates.  The divergent-parity program below is the
+canonical superblock workload: a helper called from **both** arms of a
+hot branch (the multi-predecessor join that structural
+``JumpChainFusion`` must skip and only the profile-guided
+tail-duplicating inliner may fuse) plus a single-call-site helper (the
+frame-merge opportunity).
+"""
+import numpy as np
+import pytest
+
+from repro.core import batching, frontend, ir, lowering
+from repro.core.frontend import I32
+from repro.obs import block_profile
+from repro.obs.blockprof import PROFILE_VERSION, BlockProfile
+
+
+def build_parity():
+    """A loop whose body diverges on parity, both arms calling ``h``.
+
+    ``h`` has two call sites (only tail-duplicating inlining can absorb
+    it); ``g`` has one (the frame-merge case).  Lanes with different
+    seeds interleave even/odd iterations, so both arms stay hot.
+    """
+    pb = frontend.ProgramBuilder(main="par")
+    hb = pb.function("h", ["x"], ["y"], {"x": I32}, {"y": I32})
+    hb.assign("y", lambda x: x * 3 + 1, ["x"])
+    hb.return_()
+    pb.add(hb)
+    gb = pb.function("g", ["a"], ["b"], {"a": I32}, {"b": I32})
+    gb.assign("b", lambda a: a - 5, ["a"])
+    gb.return_()
+    pb.add(gb)
+    fb = pb.function(
+        "par", ["n", "x"], ["out"], {"n": I32, "x": I32}, {"out": I32}
+    )
+    fb.copy("x", out="acc")
+    fb.copy("n", out="i")
+    with fb.while_(lambda i: i > 0, ["i"]):
+        c = fb.prim(lambda acc: acc % 2 == 0, ["acc"], name="even")
+        with fb.if_(c):
+            fb.call("h", ["acc"], out="acc")
+        with fb.orelse():
+            fb.call("h", ["acc"], out="t")
+            fb.assign("acc", lambda t: t + 1, ["t"])
+        fb.call("g", ["acc"], out="acc")
+        fb.assign("i", lambda i: i - 1, ["i"])
+    fb.copy("acc", out="out")
+    fb.return_()
+    pb.add(fb)
+    return pb.build()
+
+
+def _parity_inputs(lanes=8):
+    rng = np.random.default_rng(5)
+    n = rng.integers(3, 9, size=lanes).astype(np.int32)
+    x = rng.integers(-40, 41, size=lanes).astype(np.int32)
+    return n, x
+
+
+def _traced_parity(**opts):
+    fn = batching.autobatch(
+        build_parity(), backend="pc", max_depth=8, max_steps=100_000,
+        fuse=True, trace=True, verify=True, **opts,
+    )
+    n, x = _parity_inputs()
+    out = np.asarray(fn(n, x)["out"])
+    return fn, (n, x), out
+
+
+class TestSuperblocks:
+    def test_parity_pgo_strictly_reduces_dispatches(self):
+        fn, args, base = _traced_parity()
+        base_stats = fn.scheduler_stats
+        prof = block_profile(fn.last_trace)
+        opt = fn.optimize(prof)
+        np.testing.assert_array_equal(np.asarray(opt(*args)["out"]), base)
+        stats = opt.scheduler_stats
+        assert stats.steps < base_stats.steps, (
+            f"hot-path superblocks must cut dispatches: "
+            f"{base_stats.steps} -> {stats.steps}"
+        )
+        assert stats.masked_updates < base_stats.masked_updates
+        # Both helper frames dissolved into their callers: the single-site
+        # ``g`` by the frame merge, the two-site ``h`` by tail-duplicating
+        # inlining (which the structural fuser must never do on its own).
+        assert stats.num_blocks < base_stats.num_blocks
+        assert "h" not in opt.lowered.func_entries
+        assert "g" not in opt.lowered.func_entries
+        structural = fn.lowered
+        assert "h" in structural.func_entries  # fuse alone keeps the frame
+
+    def test_nuts_pgo_bitexact_and_reduced(self):
+        from repro.mcmc import nuts, targets
+
+        target = targets.isotropic_gaussian(2)
+        settings = nuts.NutsSettings(
+            max_tree_depth=3, num_steps=2, steps_per_leaf=2
+        )
+        kern = nuts.make_nuts_kernel(
+            target, settings, backend="pc", max_steps=200_000,
+            fuse=True, verify=True,
+        )
+        traced = kern.with_options(trace=True)
+        args = nuts.initial_state(target, 8, eps=0.1, seed=0)
+        base = traced(*args)
+        base_stats = traced.scheduler_stats
+        opt = kern.optimize(block_profile(traced.last_trace))
+        out = opt(*args)
+        for k in base:
+            np.testing.assert_array_equal(
+                np.asarray(out[k]), np.asarray(base[k]),
+                err_msg=f"NUTS output {k!r} drifted under PGO",
+            )
+        stats = opt.scheduler_stats
+        assert stats.steps < base_stats.steps
+        assert stats.masked_updates < base_stats.masked_updates
+        layout = opt.lowered.state_layout
+        assert layout is not None and len(layout.groups) >= 1, (
+            "NUTS has many same-spec scalars; layout packing must fire"
+        )
+
+
+class TestLayoutPacking:
+    def test_packed_members_leave_vm_state(self):
+        fn, args, base = _traced_parity()
+        opt = fn.optimize(block_profile(fn.last_trace))
+        low = opt.lowered
+        layout = low.state_layout
+        assert layout is not None
+        for packed, members in layout.groups.items():
+            assert len(members) >= 2
+            k = low.var_specs[packed].shape[0]
+            assert k == len(members)
+            for m in members:
+                # The member's cross-block value lives in the packed slot;
+                # the per-member buffer is gone from VM state.
+                assert m in low.temp_vars
+                assert layout.slot_of(m) == (packed, members.index(m))
+        np.testing.assert_array_equal(np.asarray(opt(*args)["out"]), base)
+
+    def test_segmented_stepper_reads_packed_outputs(self):
+        fn, (n, x), base = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        opt = fn.optimize(prof)
+        opt(n, x)
+        single_steps = int(opt.last_result.steps)
+        st = opt.stepper(n, x)
+        state = st.init()
+        budget = 0
+        while not st.done(state):
+            state = st.step(state, 3)
+            budget += 1
+            assert budget < 10_000
+        np.testing.assert_array_equal(
+            np.asarray(st.result(state)["out"]), base,
+            err_msg="segmented PGO run != single-shot baseline",
+        )
+        assert st.steps(state) == single_steps
+
+
+class TestProfileRoundTrip:
+    def test_save_load_round_trip(self, tmp_path):
+        fn, _, _ = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        path = tmp_path / "profile.json"
+        prof.save(str(path))
+        back = BlockProfile.load(str(path))
+        assert back.digest() == prof.digest()
+        np.testing.assert_array_equal(back.dispatches, prof.dispatches)
+        np.testing.assert_array_equal(back.total_active, prof.total_active)
+        np.testing.assert_array_equal(back.transitions, prof.transitions)
+        assert back.schedule == prof.schedule
+        assert back.batch_size == prof.batch_size
+
+    def test_v1_profile_still_loads(self):
+        fn, _, _ = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        data = prof.to_json()
+        data["version"] = 1
+        for row in data["blocks"]:
+            del row["total_active"]  # v1 lacked the exact integer
+        back = BlockProfile.from_json(data)
+        # v1 reconstructs totals from the rounded per-dispatch means.
+        np.testing.assert_array_equal(back.dispatches, prof.dispatches)
+        np.testing.assert_allclose(
+            back.total_active, prof.total_active, atol=1,
+        )
+
+    def test_unsupported_version_rejected(self):
+        fn, _, _ = _traced_parity()
+        data = block_profile(fn.last_trace).to_json()
+        data["version"] = PROFILE_VERSION + 1
+        with pytest.raises(ValueError, match="unsupported block profile"):
+            BlockProfile.from_json(data)
+        with pytest.raises(ValueError, match="no 'version' field"):
+            BlockProfile.from_json({"num_blocks": 3})
+
+
+class TestPlumbing:
+    def test_optimize_equals_with_options_pgo(self):
+        fn, args, base = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        via_opt = fn.optimize(prof)
+        via_wo = fn.with_options(pgo=prof)
+        assert via_opt._pgo_digest() == via_wo._pgo_digest() \
+            == prof.digest()
+        np.testing.assert_array_equal(
+            np.asarray(via_opt(*args)["out"]),
+            np.asarray(via_wo(*args)["out"]),
+        )
+
+    def test_pgo_accepts_a_saved_profile_path(self, tmp_path):
+        fn, args, base = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        path = tmp_path / "p.json"
+        prof.save(str(path))
+        opt = batching.autobatch(
+            build_parity(), backend="pc", max_depth=8, max_steps=100_000,
+            fuse=True, verify=True, pgo=str(path),
+        )
+        assert opt._pgo_digest() == prof.digest()
+        np.testing.assert_array_equal(np.asarray(opt(*args)["out"]), base)
+
+    def test_lowered_shared_only_for_equal_digests(self):
+        fn, _, _ = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        opt = fn.optimize(prof)
+        low = opt.lowered
+        assert opt.with_options(max_steps=50_000).lowered is low
+        assert fn.with_options(max_steps=50_000).lowered is fn.lowered
+        assert opt.lowered is not fn.lowered
+
+    def test_bogus_pgo_value_rejected(self):
+        with pytest.raises(TypeError, match="pgo"):
+            batching.autobatch(
+                build_parity(), backend="pc", pgo=object(),
+            )
+
+
+class TestPretty:
+    def test_pretty_renders_permutation_and_layout(self):
+        low = lowering.lower(build_parity())
+        n = len(low.blocks)
+        perm = tuple(reversed(range(n)))
+        shown = ir.dataclass_replace(
+            low,
+            block_order=perm,
+            state_layout=ir.StateLayout(
+                groups={"%pgo/pack0": ("par/acc", "par/i")}
+            ),
+        )
+        text = shown.pretty()
+        assert f"reordered: [{','.join(str(o) for o in perm)}]" in text
+        assert "layout %pgo/pack0: [par/acc, par/i]" in text
+
+    def test_real_pgo_lowering_renders(self):
+        fn, _, _ = _traced_parity()
+        opt = fn.optimize(block_profile(fn.last_trace))
+        text = opt.lowered.pretty()
+        assert "layout %pgo/pack" in text
+
+
+class TestCacheKey:
+    def test_profile_digest_distinguishes_executors(self):
+        """Two different profiles must not collide in the executor cache:
+        the digest is part of the aval key."""
+        fn, args, _ = _traced_parity()
+        prof = block_profile(fn.last_trace)
+        assert fn._pgo_digest() is None
+        opt = fn.optimize(prof)
+        assert opt._pgo_digest() == prof.digest()
+        # A structurally different profile yields a different digest.
+        data = prof.to_json()
+        data["blocks"][0]["dispatches"] += 1
+        other = BlockProfile.from_json(data)
+        assert other.digest() != prof.digest()

@@ -274,6 +274,174 @@ class TestProvenance:
             verifier.verify(bad)
 
 
+def _packed_low() -> ir.LoweredProgram:
+    """Minimal valid layout-packed program: one block unpacks two members
+    from a packed array, combines them, and packs the group back."""
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return ir.LoweredProgram(
+        blocks=[
+            ir.LBlock(
+                ops=[
+                    ir.LPrim(
+                        outs=("main/a", "main/b"),
+                        fn=lambda p: (p[0], p[1]),
+                        ins=("%pgo/pack0",),
+                        name="unpack",
+                    ),
+                    ir.LPrim(
+                        outs=("main/w",),
+                        fn=lambda a, b: a + b,
+                        ins=("main/a", "main/b"),
+                        name="add",
+                    ),
+                    ir.LPrim(
+                        outs=("%pgo/pack0",),
+                        fn=lambda a, b: jnp.stack((a, b)),
+                        ins=("main/a", "main/b"),
+                        name="pack",
+                    ),
+                ],
+                term=ir.LReturn(),
+                label="main",
+            )
+        ],
+        entry=0,
+        main_params=("main/w",),
+        main_outputs=("main/w",),
+        var_specs={
+            "main/a": i32,
+            "main/b": i32,
+            "main/w": i32,
+            "%pgo/pack0": jax.ShapeDtypeStruct((2,), jnp.int32),
+        },
+        stack_vars=frozenset(),
+        temp_vars=frozenset({"main/a", "main/b"}),
+        func_entries={"main": 0},
+        state_layout=ir.StateLayout(
+            groups={"%pgo/pack0": ("main/a", "main/b")}
+        ),
+    )
+
+
+class TestLayoutPacking:
+    def test_valid_packed_program_passes(self):
+        verifier.verify(_packed_low())
+
+    def test_group_of_one_rejected(self):
+        bad = ir.dataclass_replace(
+            _packed_low(),
+            state_layout=ir.StateLayout(
+                groups={"%pgo/pack0": ("main/a",)}
+            ),
+        )
+        with pytest.raises(
+            verifier.VerificationError, match=r"packs 1 member\(s\)"
+        ):
+            verifier.verify(bad, check_specs=False)
+
+    def test_packed_var_needs_spec(self):
+        low = _packed_low()
+        specs = dict(low.var_specs)
+        del specs["%pgo/pack0"]
+        bad = ir.dataclass_replace(low, var_specs=specs)
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"packed variable '%pgo/pack0' has no var_specs",
+        ):
+            verifier.verify(bad, check_specs=False)
+
+    def test_member_in_two_groups_rejected(self):
+        low = _packed_low()
+        bad = ir.dataclass_replace(
+            low,
+            var_specs={
+                **low.var_specs,
+                "%pgo/pack1": low.var_specs["%pgo/pack0"],
+            },
+            state_layout=ir.StateLayout(
+                groups={
+                    "%pgo/pack0": ("main/a", "main/b"),
+                    "%pgo/pack1": ("main/a", "main/b"),
+                }
+            ),
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"member 'main/a' belongs to both",
+        ):
+            verifier.verify(bad, check_specs=False)
+
+    def test_member_must_be_temp(self):
+        bad = ir.dataclass_replace(
+            _packed_low(), temp_vars=frozenset({"main/a"})
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"member 'main/b' must be a block-local temp",
+        ):
+            verifier.verify(bad, check_specs=False)
+
+    def test_member_spec_mix_rejected(self):
+        low = _packed_low()
+        bad = ir.dataclass_replace(
+            low,
+            var_specs={
+                **low.var_specs,
+                "main/b": jax.ShapeDtypeStruct((), jnp.float32),
+            },
+        )
+        with pytest.raises(
+            verifier.VerificationError, match="mixes member specs"
+        ):
+            verifier.verify(bad, check_specs=False)
+
+    def test_packed_spec_shape_rejected(self):
+        low = _packed_low()
+        bad = ir.dataclass_replace(
+            low,
+            var_specs={
+                **low.var_specs,
+                "%pgo/pack0": jax.ShapeDtypeStruct((3,), jnp.int32),
+            },
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"\(k,\) \+ member shape",
+        ):
+            verifier.verify(bad, check_specs=False)
+
+
+class TestReordering:
+    def test_non_permutation_rejected(self, fib_low):
+        n = len(fib_low.blocks)
+        bad = ir.dataclass_replace(
+            copy_lowered(fib_low), block_order=(0,) * n
+        )
+        with pytest.raises(
+            verifier.VerificationError, match="not a permutation"
+        ):
+            verifier.verify(bad)
+
+    def test_block_weights_length_checked(self, fib_low):
+        bad = ir.dataclass_replace(
+            copy_lowered(fib_low), block_weights=(1, 2)
+        )
+        with pytest.raises(
+            verifier.VerificationError,
+            match=r"block_weights has 2 entries",
+        ):
+            verifier.verify(bad)
+
+    def test_valid_permutation_passes(self, fib_low):
+        n = len(fib_low.blocks)
+        good = ir.dataclass_replace(
+            copy_lowered(fib_low),
+            block_order=tuple(range(n)),
+            block_weights=(7,) * n,
+        )
+        verifier.verify(good)
+
+
 class TestUnmutatedProgramsVerifyClean:
     """The positive direction: real programs pass after *every* pass."""
 

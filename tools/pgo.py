@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""pgo: trace a program, build a block-frequency profile, re-lower through
+the profile-guided pipeline and verify the optimization paid off.
+
+    PYTHONPATH=src python tools/pgo.py [--nuts] [SPEC ...] \\
+        [--profile profile.json] [--save-profile profile.json]
+
+Each SPEC is ``module:attr`` or ``path/to/file.py:attr``, where ``attr``
+resolves to a zero-argument callable returning ``(fn, args)`` — an
+``AutobatchedFunction`` and the positional arguments to call it with
+(the same contract as ``tools/vmtrace.py``).  ``--nuts`` runs the
+built-in NUTS kernel at ``--batch`` chains.
+
+For every program, pgo:
+
+1. runs it once with dispatch tracing on (``with_options(trace=...)``)
+   and distills the trace into a :class:`repro.obs.blockprof.BlockProfile`
+   — or loads a previously saved profile (``--profile``),
+2. re-lowers through ``passes.pgo_passes`` via ``fn.optimize(profile)``:
+   trace-driven superblock formation, hot-state layout packing, block
+   reordering,
+3. re-runs the optimized handle on the same inputs and checks the
+   outputs are **bit-exact** with the baseline,
+4. prints the before/after block counts, dispatch counts and masked
+   state-update counts.
+
+Exit status 1 if any program fails to run, the optimized outputs differ,
+or the optimized run does not strictly reduce the dispatch count — this
+is the CI smoke gate for the profile-guided optimization pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from vmtrace import _as_run, _load_attr, _nuts_run  # shared CLI contract
+
+
+def pgo_one(name: str, fn, args, *, capacity, profile_path,
+            save_profile) -> bool:
+    """Baseline-trace, optimize and compare one program."""
+    import numpy as np
+
+    from repro.obs import block_profile, format_profile
+    from repro.obs.blockprof import BlockProfile
+
+    print(f"== {name} ==")
+    if fn.backend != "pc":
+        print(f"FAILED: profile-guided optimization needs the pc backend "
+              f"(got {fn.backend!r})")
+        return False
+
+    traced = fn.with_options(trace=capacity)
+    base_out = traced(*args)
+    base = traced.scheduler_stats
+    if base is None or base.steps is None:
+        print("FAILED: baseline run collected no scheduler stats")
+        return False
+    if profile_path:
+        prof = BlockProfile.load(profile_path)
+        print(f"loaded {profile_path} (digest {prof.digest()})")
+    else:
+        tr = traced.last_trace
+        if tr is None or len(tr) == 0:
+            print("FAILED: baseline run recorded no dispatch events")
+            return False
+        prof = block_profile(tr)
+    print(format_profile(prof))
+    if save_profile:
+        prof.save(save_profile)
+        print(f"wrote {save_profile}: block-frequency profile "
+              f"(digest {prof.digest()})")
+
+    opt = fn.optimize(prof)
+    opt_out = opt(*args)
+    sched = opt.scheduler_stats
+    layout = opt.lowered.state_layout
+    groups = 0 if layout is None else len(layout.groups)
+    print(f"blocks:         {base.num_blocks:6d} -> {sched.num_blocks:6d}"
+          f"   (layout groups: {groups})")
+    print(f"dispatches:     {base.steps:6d} -> {sched.steps:6d}")
+    print(f"masked updates: {base.masked_updates:6d} -> "
+          f"{sched.masked_updates:6d}")
+
+    base_flat, _ = _flatten(base_out)
+    opt_flat, _ = _flatten(opt_out)
+    for i, (a, b) in enumerate(zip(base_flat, opt_flat)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            print(f"FAILED: optimized output leaf {i} differs from baseline")
+            return False
+    print("outputs: bit-exact with baseline")
+    if sched.steps >= base.steps:
+        print(f"FAILED: dispatch count did not improve "
+              f"({base.steps} -> {sched.steps})")
+        return False
+    print()
+    return True
+
+
+def _flatten(tree):
+    import jax
+
+    return jax.tree_util.tree_flatten(tree)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="pgo", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument("specs", nargs="*", metavar="SPEC",
+                    help="module:attr or path.py:attr resolving to a "
+                         "zero-arg callable returning (fn, args)")
+    ap.add_argument("--nuts", action="store_true",
+                    help="also optimize the built-in NUTS kernel")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="--nuts chain count (default 32)")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="trace ring-buffer capacity for the baseline run "
+                         "(default: obs.trace.DEFAULT_TRACE_CAPACITY)")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="reuse a saved block-frequency profile instead of "
+                         "tracing a fresh one")
+    ap.add_argument("--save-profile", default=None, metavar="PATH",
+                    help="save the collected profile JSON here")
+    args = ap.parse_args(argv)
+    if not args.specs and not args.nuts:
+        ap.error("nothing to optimize: pass SPECs and/or --nuts")
+    capacity = True if args.capacity is None else args.capacity
+
+    runs: list[tuple[str, object, tuple]] = []
+    if args.nuts:
+        fn, fn_args = _nuts_run(args.batch)
+        runs.append((f"nuts (built-in, batch={args.batch})", fn, fn_args))
+    for spec in args.specs:
+        fn, fn_args = _as_run(_load_attr(spec))
+        runs.append((spec, fn, fn_args))
+
+    ok = True
+    for name, fn, fn_args in runs:
+        ok &= pgo_one(name, fn, fn_args, capacity=capacity,
+                      profile_path=args.profile,
+                      save_profile=args.save_profile)
+    if not ok:
+        print("pgo: FAILED")
+        return 1
+    print(f"pgo: {len(runs)} program(s) optimized")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
